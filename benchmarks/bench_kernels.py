@@ -1,0 +1,94 @@
+"""Kernel micro-benchmarks: Pallas (interpret) correctness-checked against
+the XLA reference path, with wall-clock of the XLA path (the deployable
+CPU number; interpret mode is a correctness harness, not a perf path —
+real kernel perf is the dry-run roofline).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+Row = Tuple[str, float, str]
+
+
+def _time(fn, *args, iters=5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6    # us
+
+
+def bench_kernels() -> List[Row]:
+    rows: List[Row] = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+
+    # IBN: transformer-FFN-shaped (olmo-like, scaled down)
+    M, D, F = 512, 256, 1024
+    x = jax.random.normal(ks[0], (M, D), jnp.float32)
+    w1 = jax.random.normal(ks[1], (D, F)) * 0.05
+    w2 = jax.random.normal(ks[2], (F, D)) * 0.05
+    t_ref = _time(jax.jit(lambda a, b, c: ref.fused_ibn_ref(a, b, c)),
+                  x, w1, w2)
+    out = ops.fused_ibn(x, w1, w2)
+    err = float(jnp.abs(out - ref.fused_ibn_ref(x, w1, w2)).max())
+    rows.append(("kernel.fused_ibn.xla_us", t_ref,
+                 f"pallas-interp maxerr={err:.1e} M={M} D={D} F={F}"))
+
+    # matmul+LN
+    g, be = jnp.ones((D,)), jnp.zeros((D,))
+    w = jax.random.normal(ks[3], (D, D)) * 0.05
+    b = jnp.zeros((D,))
+    t_ref = _time(jax.jit(
+        lambda a: ref.matmul_ln_ref(a, w, b, g, be)), x[:, :D])
+    out = ops.matmul_ln(x[:, :D], w, b, g, be)
+    err = float(jnp.abs(out - ref.matmul_ln_ref(x[:, :D], w, b, g, be)
+                        ).max())
+    rows.append(("kernel.matmul_ln.xla_us", t_ref,
+                 f"pallas-interp maxerr={err:.1e}"))
+
+    # flash attention
+    q = jax.random.normal(ks[4], (1, 4, 256, 64))
+    kk = jax.random.normal(ks[5], (1, 4, 256, 64))
+    v = jax.random.normal(ks[6], (1, 4, 256, 64))
+    t_ref = _time(jax.jit(lambda a, b, c: ref.attention_ref(a, b, c)),
+                  q, kk, v)
+    out = ops.flash_attention(q, kk, v, block_q=128, block_k=128)
+    err = float(jnp.abs(out - ref.attention_ref(q, kk, v)).max())
+    rows.append(("kernel.flash_attention.xla_us", t_ref,
+                 f"pallas-interp maxerr={err:.1e} S=256"))
+
+    # depthwise conv (EdgeNeXt stage-3-shaped)
+    xi = jax.random.normal(ks[7], (1, 16, 16, 160))
+    wd = jax.random.normal(ks[0], (7, 7, 160)) * 0.1
+    bd = jnp.zeros((160,))
+    t_ref = _time(jax.jit(lambda a: ref.depthwise_conv2d_ref(a, wd, bd)),
+                  xi)
+    out = ops.depthwise_conv2d(xi, wd, bd)
+    err = float(jnp.abs(out - ref.depthwise_conv2d_ref(xi, wd, bd)).max())
+    rows.append(("kernel.depthwise_conv.xla_us", t_ref,
+                 f"pallas-interp maxerr={err:.1e} 16x16x160 k7"))
+
+    # wkv chunk
+    BH, T, K = 8, 128, 64
+    r = jax.random.normal(ks[1], (BH, T, K)) * 0.5
+    k2 = jax.random.normal(ks[2], (BH, T, K)) * 0.5
+    v2 = jax.random.normal(ks[3], (BH, T, K)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[4], (BH, T, K)))
+    u = jax.random.normal(ks[5], (BH, K)) * 0.5
+    t_ref = _time(jax.jit(
+        lambda *a: ref.wkv_ref(*a)[0]), r, k2, v2, lw, u)
+    out, _ = ops.wkv_chunked(r, k2, v2, lw, u)
+    err = float(jnp.abs(out - ref.wkv_ref(r, k2, v2, lw, u)[0]).max())
+    rows.append(("kernel.wkv_chunked.xla_us", t_ref,
+                 f"pallas-interp maxerr={err:.1e} T={T}"))
+    return rows

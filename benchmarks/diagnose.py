@@ -1,0 +1,64 @@
+"""Per-cell HLO diagnosis: top collectives with op provenance.
+
+    PYTHONPATH=src:. python benchmarks/diagnose.py --arch X --shape Y [-n 12]
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import re
+
+
+def collect(hlo: str, top: int = 14):
+    pat = re.compile(
+        r'= (\S+) (all-gather|all-reduce|reduce-scatter|all-to-all|'
+        r'collective-permute)(?:-start)?\((.*)')
+    rows = []
+    for line in hlo.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        dims = re.findall(r'(\w+)\[([\d,]*)\]', shape_str)
+        nbytes = 0
+        for dt, dd in dims:
+            sz = {'f32': 4, 'bf16': 2, 's32': 4, 'u32': 4, 'pred': 1,
+                  's8': 1, 'u8': 1}.get(dt, 4)
+            n = 1
+            for x in dd.split(','):
+                if x:
+                    n *= int(x)
+            nbytes += n * sz
+        meta = re.search(r'op_name="([^"]*)"', line)
+        rows.append((nbytes, op, shape_str[:48],
+                     meta.group(1)[-80:] if meta else ''))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("-n", type=int, default=14)
+    ap.add_argument("--ibn-chunks", type=int, default=0)
+    ap.add_argument("--profile", default="2d")
+    args = ap.parse_args()
+
+    from repro.launch import dryrun
+    import json
+    hlo_path = f"/tmp/{args.arch}_{args.shape}.hlo"
+    rec = dryrun.lower_cell(args.arch, args.shape, multi_pod=False,
+                            ibn_chunks=args.ibn_chunks, scan_unroll=1,
+                            hlo_out=hlo_path, profile=args.profile)
+    print(json.dumps({k: rec.get(k) for k in
+                      ("compile_s", "collective_wire_bytes")}, indent=1))
+    hlo = open(hlo_path).read()
+    for nbytes, op, shape, meta in collect(hlo, args.n):
+        print(f"{nbytes/1e6:10.1f}MB {op:12s} {shape:48s} ...{meta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Emit the EXPERIMENTS.md tables from the dry-run artifacts.
+
+    PYTHONPATH=src:. python benchmarks/report.py            # markdown to stdout
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks import roofline                               # noqa: E402
+
+
+def md_roofline(mesh_tag: str, tag: str = "") -> str:
+    rows = roofline.table(mesh_tag, tag)
+    out = ["| arch | shape | compute_s | mem_lo_s | mem_hi_s | collective_s"
+           " | bound | roofline | useful | MFU |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r.get('memory_s_hi', 0):.3e} | "
+            f"{r['collective_s']:.3e} | {r['bound']} | "
+            f"{100*r['roofline_fraction']:.1f}% | "
+            f"{100*min(r['useful_ratio'], 9.99):.1f}% | "
+            f"{100*r.get('mfu_proxy', 0):.1f}% |")
+    return "\n".join(out)
+
+
+def md_dryrun(mesh_tag: str, tag: str = "") -> str:
+    cells = roofline.load_cells(mesh_tag, tag)
+    out = ["| arch | shape | profile | compile_s | HLO GFLOPs/dev | "
+           "coll GB/dev | args GB | temp GB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for rec in sorted(cells, key=lambda r: (r["arch"], r["shape"])):
+        c = rec.get("corrected", {})
+        ma = rec.get("memory_analysis", {})
+        out.append(
+            f"| {rec['arch']} | {rec['shape']} | "
+            f"{rec.get('profile', '2d')} | {rec.get('compile_s', 0):.1f} | "
+            f"{c.get('flops', 0)/1e9:.1f} | "
+            f"{c.get('collective_wire_bytes', 0)/1e9:.2f} | "
+            f"{ma.get('argument_bytes', 0)/1e9:.2f} | "
+            f"{ma.get('temp_bytes', 0)/1e9:.2f} |")
+    return "\n".join(out)
+
+
+def summary(tag: str = "") -> str:
+    rows = roofline.table("pod1", tag)
+    lines = []
+    for kind in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        sub = [r for r in rows if r["shape"] == kind]
+        if sub:
+            fr = sum(r["roofline_fraction"] for r in sub) / len(sub)
+            mfu = sum(r["mfu_proxy"] for r in sub) / len(sub)
+            lines.append(f"  {kind:12s} mean roofline fraction "
+                         f"{100*fr:5.1f}%  mean MFU-proxy {100*mfu:5.1f}%  "
+                         f"(n={len(sub)})")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    print("## S Dry-run — baseline (pod1, 16x16, profile 2d)\n")
+    print(md_dryrun("pod1"))
+    print("\n## S Dry-run — optimized (pod1, per-cell profiles)\n")
+    print(md_dryrun("pod1", "opt"))
+    print("\n## S Dry-run — multi-pod (pod2, 2x16x16)\n")
+    print(md_dryrun("pod2"))
+    print("\n## S Roofline — baseline (pod1)\n")
+    print(md_roofline("pod1"))
+    print("\n## S Roofline — optimized (pod1)\n")
+    print(md_roofline("pod1", "opt"))
+    print("\nBaseline summary:\n" + summary())
+    print("\nOptimized summary:\n" + summary("opt"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For each (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+  memory term     = HLO_bytes / HBM_bw               (per chip)
+  collective term = collective_wire_bytes / ICI_bw   (per chip)
+
+HLO numbers come from the compiled SPMD module (per-device) with the
+scan-trip-count correction applied by the dry-run (XLA cost_analysis
+counts while-loop bodies once).  MODEL_FLOPS = 6·N·D (train) or 2·N_active·D
+(inference) per device, for the usefulness ratio.
+"""
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, get_config
+from repro.core.hloanalysis import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.models import get_module, params as param_lib
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+MESH_CHIPS = {"16x16": 256, "2x16x16": 512}
+# dp-shard counts per mesh (batch divided over dp axes when divisible)
+DP = {"16x16": 16, "2x16x16": 32}
+TP = 16
+
+_param_cache: Dict[str, int] = {}
+
+
+def n_params(arch: str) -> int:
+    if arch not in _param_cache:
+        cfg = get_config(arch)
+        defs = get_module(cfg).param_defs(cfg)
+        _param_cache[arch] = param_lib.count_params(defs)
+    return _param_cache[arch]
+
+
+def n_active_params(arch: str, kind: str = "train") -> int:
+    """Matmul-active params per token (PaLM-style MFU counting):
+    embedding-table gathers are excluded; the unembedding matmul counts
+    only where the head actually runs (train / decode — prefill returns
+    hidden states, no logits); MoE counts routed top-k + shared only."""
+    cfg = get_config(arch)
+    total = n_params(arch)
+    v, d = cfg.padded_vocab, cfg.d_model
+    total -= v * d                              # embedding gather ≠ matmul
+    if not cfg.tie_embeddings:
+        total -= v * d                          # unembed weights
+    if kind in ("train", "decode"):
+        total += v * d                          # ...but the head matmul runs
+    if cfg.moe.enabled:
+        m = cfg.moe
+        gated = 3 if cfg.mlp in ("swiglu", "geglu") else 2
+        per_expert = gated * d * m.d_ff_expert
+        total -= (m.num_experts_padded - m.top_k) * per_expert \
+            * cfg.num_layers
+    if cfg.family == "audio" and kind == "prefill":
+        total //= 2                             # decoder sees 1 token
+    return total
+
+
+def model_flops_per_device(rec: dict) -> float:
+    arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+    kind = rec["kind"]
+    sl = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 1,
+          "long_500k": 1}[shape]
+    gb = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+          "long_500k": 1}[shape]
+    tokens = sl * gb
+    n = n_active_params(arch, kind)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens / MESH_CHIPS[mesh]
+
+
+def load_cells(mesh_tag: str = "pod1", tag: str = "") -> List[dict]:
+    cells = []
+    suffix = f"-{tag}" if tag else ""
+    for p in sorted(ARTIFACT_DIR.glob(f"*__{mesh_tag}{suffix}.json")):
+        if not tag and "-" in p.stem.split("__")[-1]:
+            continue          # skip tagged variants when loading baselines
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def roofline_row(rec: dict) -> dict:
+    """Three roofline terms for one cell.
+
+    The memory term is an interval: XLA:CPU compiles without the TPU
+    fusion pipeline, so per-op ``bytes accessed`` grossly overcounts HBM
+    traffic (every elementwise intermediate round-trips).  We report
+      memory_hi = bytes_accessed / HBM_bw         (no-fusion upper bound)
+      memory_lo = (args + outputs + temp) / HBM_bw (each buffer touched
+                   once — what a perfectly fused TPU module must move)
+    and use memory_lo for the bound/fraction (decode cells: args =
+    params + KV cache per step, which IS the real traffic).
+    """
+    corr = rec.get("corrected", {})
+    flops = corr.get("flops", 0.0)
+    hbm_hi = corr.get("bytes accessed", 0.0)
+    ma = rec.get("memory_analysis", {})
+    hbm_lo = (ma.get("argument_bytes", 0) + ma.get("output_bytes", 0)
+              + ma.get("temp_bytes", 0))
+    # donated buffers alias args<->outputs: subtract the aliased size once
+    hbm_lo -= ma.get("alias_bytes", 0)
+    hbm_lo = max(hbm_lo, 0)
+    coll = corr.get("collective_wire_bytes", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m_lo = hbm_lo / HBM_BW
+    t_m_hi = hbm_hi / HBM_BW
+    t_x = coll / ICI_BW
+    terms = {"compute": t_c, "memory": t_m_lo, "collective": t_x}
+    bound = max(terms, key=terms.get)
+    step = max(t_c, t_m_lo, t_x)
+    mf = model_flops_per_device(rec)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m_lo, "memory_s_hi": t_m_hi,
+        "collective_s": t_x,
+        "bound": bound, "step_s": step,
+        "roofline_fraction": t_c / step if step else 0.0,
+        "model_flops": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        # MFU proxy: useful model flops over what the roofline step time
+        # could have computed at peak — the score to hillclimb (catches
+        # both collective/memory stalls AND wasted/replicated compute)
+        "mfu_proxy": mf / (step * PEAK_FLOPS) if step else 0.0,
+        "compile_s": rec.get("compile_s", 0.0),
+    }
+
+
+def table(mesh_tag: str = "pod1", tag: str = "") -> List[dict]:
+    return [roofline_row(r) for r in load_cells(mesh_tag, tag)]
+
+
+def fmt_table(rows: List[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'mem_lo_s':>10s} "
+           f"{'mem_hi_s':>10s} {'collect_s':>10s} {'bound':>10s} "
+           f"{'roofl%':>7s} {'useful%':>8s} {'MFU%':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.3e} "
+            f"{r['memory_s']:10.3e} {r.get('memory_s_hi', 0):10.3e} "
+            f"{r['collective_s']:10.3e} "
+            f"{r['bound']:>10s} {100*r['roofline_fraction']:6.1f}% "
+            f"{100*min(r['useful_ratio'],9.99):7.1f}% "
+            f"{100*r.get('mfu_proxy', 0):5.1f}%")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rows = table(args.mesh, args.tag)
+    print(fmt_table(rows))
+    # aggregate view
+    for kind in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        sub = [r for r in rows if r["shape"] == kind]
+        if sub:
+            avg = sum(r["roofline_fraction"] for r in sub) / len(sub)
+            print(f"mean roofline fraction {kind}: {100*avg:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark aggregator: one section per paper table/figure + kernels +
+(if dry-run artifacts exist) the TPU roofline summary.
+
+Prints ``name,value,derived`` CSV.  Usage:
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    from benchmarks.paper_figs import ALL
+    from benchmarks.bench_kernels import bench_kernels
+
+    print("name,value,derived")
+    for section, fn in ALL.items():
+        t0 = time.perf_counter()
+        for name, value, note in fn():
+            print(f"{name},{value:.6g},{note}")
+        dt = (time.perf_counter() - t0) * 1e6
+        print(f"_section.{section}.us_per_call,{dt:.0f},")
+
+    t0 = time.perf_counter()
+    for name, value, note in bench_kernels():
+        print(f"{name},{value:.6g},{note}")
+    dt = (time.perf_counter() - t0) * 1e6
+    print(f"_section.kernels.us_per_call,{dt:.0f},")
+
+    # roofline summaries from dry-run artifacts (if present)
+    try:
+        from benchmarks import roofline
+        for tag, label in (("", "baseline"), ("opt", "optimized")):
+            rows = roofline.table("pod1", tag)
+            if not rows:
+                continue
+            for r in rows:
+                print(f"roofline.{label}.{r['arch']}.{r['shape']},"
+                      f"{r['roofline_fraction']:.4f},bound={r['bound']} "
+                      f"mfu={r.get('mfu_proxy', 0):.4f}")
+            for kind in ("train_4k", "prefill_32k", "decode_32k",
+                         "long_500k"):
+                sub = [r for r in rows if r["shape"] == kind]
+                if sub:
+                    avg = sum(x["roofline_fraction"] for x in sub) / len(sub)
+                    mfu = sum(x.get("mfu_proxy", 0) for x in sub) / len(sub)
+                    print(f"roofline.{label}.mean.{kind},{avg:.4f},"
+                          f"mfu={mfu:.4f} n={len(sub)} cells")
+    except Exception as e:                                # noqa: BLE001
+        print(f"_roofline.skipped,0,{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Train every assigned architecture family for a few steps on one loop —
+the composability demo (same train_step builder, same data pipeline, same
+optimizer across dense / MoE / VLM / hybrid / SSM / enc-dec).
+
+    PYTHONPATH=src python examples/train_multiarch.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, get_config, reduced
+from repro.data.synthetic import make_dataset
+from repro.models import get_module, params as P
+from repro.optim import adamw_init, warmup_cosine
+from repro.runtime import build_train_step
+
+
+def main() -> None:
+    shape = dataclasses.replace(SHAPES_BY_NAME["train_4k"], seq_len=48,
+                                global_batch=4)
+    for arch in sorted(ARCHS):
+        cfg = reduced(get_config(arch))
+        mod = get_module(cfg)
+        ds = make_dataset(cfg, shape, seed=1)
+        params = P.init_params(jax.random.PRNGKey(0), mod.param_defs(cfg))
+        opt = adamw_init(params)
+        step_fn = jax.jit(build_train_step(
+            cfg, lr_schedule=warmup_cosine(1e-3, 5, 30)))
+        losses = []
+        for step in range(12):
+            batch = {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+            params, opt, metrics = step_fn(params, opt, batch)
+            losses.append(float(metrics["loss"]))
+        print(f"{arch:24s} [{cfg.family:6s}] loss {losses[0]:7.3f} -> "
+              f"{losses[-1]:7.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.checkpoint.store import (AsyncCheckpointer, latest_step,
+                                    load_checkpoint, restore_sharded,
+                                    save_checkpoint)
+
+__all__ = ["AsyncCheckpointer", "latest_step", "load_checkpoint",
+           "restore_sharded", "save_checkpoint"]

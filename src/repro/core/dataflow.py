@@ -1,0 +1,80 @@
+"""C1 — reconfigurable spatial dataflow model (paper §II, Fig 3).
+
+A 2-D PE array executes one layer as (Spatial X)|(Spatial Y); loops not
+spatially unrolled run temporally.  We model three spatial mappings:
+
+  OX|C : the fixed single-dataflow baseline (output-x by input-channel)
+  C|K  : input-channel by output-channel (adder-tree reduction down
+         columns) — regular/pointwise conv + GEMM
+  C|FX : input-channel by kernel-x (row-propagating accumulation) —
+         depthwise conv (each group has K=1, so any mapping that unrolls
+         K or reduction-C collapses to 1/16 utilization)
+
+``cycles(layer, mapping)`` counts temporal steps with ceil-division over
+the spatial dims (spatial under-utilization shows up as lost cycles —
+exactly the Fig 3 analysis).  Non-MAC layers (LayerNorm/Softmax) are
+bus-streaming stalls unless fused by C2 (see costmodel.LayerCost).
+"""
+from __future__ import annotations
+
+import math
+from typing import Literal
+
+from repro.core.workload import (ACT, CONV, DWCONV, ELEMWISE, MAC_OPS,
+                                 MATMUL, NORM, PWCONV, SOFTMAX, Layer)
+
+Mapping = Literal["OXC", "CK", "CFX"]
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def cycles(layer: Layer, mapping: Mapping, rows: int = 16,
+           cols: int = 16) -> int:
+    """Temporal steps to execute ``layer`` under ``mapping`` on a
+    rows x cols PE array (MACs only; returns 0 for non-MAC ops)."""
+    if layer.op not in MAC_OPS:
+        return 0
+    b, k, c = layer.b, layer.k, layer.c
+    ox, oy, fx, fy = layer.ox, layer.oy, layer.fx, layer.fy
+
+    if layer.op == DWCONV:
+        # per-group K=1 and reduction limited to the FXxFY window
+        if mapping == "OXC":
+            # OX spatial (rows), C-reduction spatial (cols) -> only one
+            # input channel contributes per group: cols utilization = 1
+            return b * c * oy * fx * fy * _ceil(ox, rows)
+        if mapping == "CK":
+            # C spatial over groups, K spatial idle (K=1 per group)
+            return b * oy * ox * fx * fy * _ceil(c, rows)
+        # CFX: groups across rows, kernel taps across cols, outputs
+        # propagate along rows accumulating over fx
+        return b * oy * ox * fy * _ceil(c, rows) * _ceil(fx, cols)
+
+    # dense conv / pointwise / matmul: full KxC MAC space available
+    if mapping == "OXC":
+        return b * k * fx * fy * oy * _ceil(ox, rows) * _ceil(c, cols)
+    if mapping == "CK":
+        return b * ox * oy * fx * fy * _ceil(c, rows) * _ceil(k, cols)
+    # CFX for a dense layer: K runs temporally — rarely sensible
+    return b * k * oy * ox * fy * _ceil(c, rows) * _ceil(fx, cols)
+
+
+def select_mapping(layer: Layer, *, reconfigurable: bool) -> Mapping:
+    """The paper's per-layer dataflow selector.
+
+    Fixed design: everything on OX|C.  Reconfigurable design: C|K for
+    conv/pointwise/GEMM, C|FX for depthwise — ``C|(K v FX)`` in the paper.
+    """
+    if not reconfigurable:
+        return "OXC"
+    return "CFX" if layer.op == DWCONV else "CK"
+
+
+def spatial_utilization(layer: Layer, mapping: Mapping, rows: int = 16,
+                        cols: int = 16) -> float:
+    cyc = cycles(layer, mapping, rows, cols)
+    if cyc == 0:
+        return 0.0
+    return layer.macs / (cyc * rows * cols)

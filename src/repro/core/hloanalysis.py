@@ -1,0 +1,152 @@
+"""Post-compile HLO analysis: collective traffic + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and bytes accessed, but not collective
+traffic — we parse the compiled (SPMD-partitioned, per-device) HLO text and
+sum the operand/result sizes of every collective op.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (values from the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# one shape token: dtype[dims]{layout}?  e.g. bf16[16,384,24576]{2,1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[\d,]*\})?")
+# an HLO instruction line:  %name = <result-type> op-name(<operands>)
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[\d,]*\](?:\{[\d,]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(([^)]*)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: int = 0
+    result_bytes: int = 0
+    operand_bytes: int = 0
+
+    def wire_bytes(self, op: str) -> float:
+        """Asymptotic per-device bytes on the wire for ring algorithms."""
+        if op == "all-reduce":
+            return 2.0 * self.result_bytes
+        if op == "all-gather":
+            return float(self.result_bytes)       # gathered result size
+        if op == "reduce-scatter":
+            return float(self.operand_bytes)      # pre-scatter operand size
+        return float(self.result_bytes)           # a2a / permute
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, CollectiveStats]:
+    """Sum collective op sizes in SPMD-partitioned (per-device) HLO text.
+
+    ``-start`` ops are counted; their paired ``-done`` is skipped to avoid
+    double counting (async collectives appear as start/done pairs).
+    """
+    stats: Dict[str, CollectiveStats] = {
+        op: CollectiveStats() for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done.(" in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result_type, op, operands = m.groups()
+        # async start results wrap (operand, result, ...) — take the largest
+        # shape as the logical result to stay robust across forms.
+        rbytes = _shape_bytes(result_type)
+        obytes = _shape_bytes(operands)
+        if "-start(" in line and op == "all-gather":
+            # result tuple contains both operand and gathered result
+            rbytes = max(rbytes - obytes, obytes)
+        st = stats[op]
+        st.count += 1
+        st.result_bytes += rbytes
+        st.operand_bytes += obytes
+    return {k: v for k, v in stats.items() if v.count}
+
+
+def collective_wire_bytes(stats: Dict[str, CollectiveStats]) -> float:
+    return sum(v.wire_bytes(op) for op, v in stats.items())
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline for one compiled (arch x shape x mesh) cell.
+
+    All *_s terms are seconds for ONE step on the given mesh; HLO numbers
+    from ``cost_analysis`` are per-device (SPMD-partitioned module).
+    """
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    ici_links: int = 1            # links usable in parallel per chip
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / (ICI_BW * self.ici_links)
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower bound on step time: terms overlap perfectly."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_term / max_term — 1.0 means perfectly compute-bound."""
+        return self.compute_s / max(self.step_s, 1e-30)
+
+
+def model_flops(n_params_active: int, tokens: int, *,
+                backward: bool = False) -> float:
+    """MODEL_FLOPS = 6·N·D for train (fwd+bwd), 2·N·D for inference."""
+    mult = 6.0 if backward else 2.0
+    return mult * n_params_active * tokens

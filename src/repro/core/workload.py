@@ -1,0 +1,195 @@
+"""Workload descriptions: every layer as a set of nested-loop dims.
+
+This is the representation ZigZag [25] (and our zigzag-lite cost model)
+operates on — Fig 1 of the paper.  Loop dims follow ZigZag naming:
+
+  B  batch          K  output channels    C  input channels
+  OX/OY output spatial                    FX/FY kernel spatial
+
+A matmul [M,Kc] @ [Kc,N] maps to OX=M, C=Kc, K=N (GEMM as 1x1 conv).
+``edgenext_workload`` walks the exact EdgeNeXt-S graph (same structure as
+models/edgenext.py) and emits the layer list the benchmarks cost out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Tuple
+
+from repro.configs.edgenext_s import EdgeNeXtConfig
+
+# op taxonomy
+CONV = "conv"          # dense conv (stem / downsample)
+DWCONV = "dwconv"      # depthwise conv
+PWCONV = "pwconv"      # pointwise (1x1) conv / linear
+MATMUL = "matmul"      # attention matmuls
+NORM = "norm"          # LayerNorm (channel-dim statistics)
+SOFTMAX = "softmax"
+ACT = "act"            # GELU etc.
+ELEMWISE = "elemwise"  # residual add / scale
+
+MAC_OPS = (CONV, DWCONV, PWCONV, MATMUL)
+
+
+@dataclasses.dataclass(frozen=True)
+class Layer:
+    name: str
+    op: str
+    b: int = 1
+    k: int = 1      # output channels (1 for dwconv groups)
+    c: int = 1      # input channels (per group for dwconv)
+    ox: int = 1
+    oy: int = 1
+    fx: int = 1
+    fy: int = 1
+    bits: int = 8
+    # graph role annotations used by the fusion planner
+    ibn_role: Optional[str] = None   # "expand" | "act" | "project"
+    ibn_id: int = -1                 # groups the three IBN layers
+
+    @property
+    def macs(self) -> int:
+        if self.op not in MAC_OPS:
+            return 0
+        return (self.b * self.k * self.c * self.ox * self.oy
+                * self.fx * self.fy)
+
+    @property
+    def input_elems(self) -> int:
+        if self.op == DWCONV:
+            return self.b * self.c * (self.ox + self.fx - 1) * \
+                (self.oy + self.fy - 1)
+        if self.op in (CONV, PWCONV, MATMUL):
+            return self.b * self.c * self.ox * self.oy * \
+                (self.fx * self.fy if self.op == CONV else 1)
+        return self.b * self.c * self.ox * self.oy
+
+    @property
+    def output_elems(self) -> int:
+        if self.op not in MAC_OPS:          # norm/act/elemwise: same shape
+            return self.input_elems
+        k = self.k if self.op != DWCONV else self.c
+        return self.b * k * self.ox * self.oy
+
+    @property
+    def weight_elems(self) -> int:
+        if self.op == DWCONV:
+            return self.c * self.fx * self.fy
+        if self.op in (CONV, PWCONV, MATMUL):
+            return self.k * self.c * self.fx * self.fy
+        return 0
+
+    @property
+    def input_bytes(self) -> int:
+        return self.input_elems * self.bits // 8
+
+    @property
+    def output_bytes(self) -> int:
+        return self.output_elems * self.bits // 8
+
+    @property
+    def weight_bytes(self) -> int:
+        return self.weight_elems * self.bits // 8
+
+
+# ---------------------------------------------------------------------------
+# EdgeNeXt-S workload
+# ---------------------------------------------------------------------------
+
+
+def _split_widths(c: int, scales: int) -> List[int]:
+    import math
+    if scales == 1:
+        return [c]
+    base = int(math.ceil(c / scales))
+    w = [base] * (scales - 1)
+    w.append(c - base * (scales - 1))
+    return w
+
+
+def edgenext_workload(cfg: EdgeNeXtConfig, batch: int = 1) -> List[Layer]:
+    """The full EdgeNeXt-S layer list at ``cfg.img_size`` input."""
+    layers: List[Layer] = []
+    ibn_counter = [0]
+
+    def ibn(prefix: str, n: int, c: int, expan: int):
+        """pw-expand -> act -> pw-project (the inverted bottleneck)."""
+        i = ibn_counter[0]
+        ibn_counter[0] += 1
+        layers.append(Layer(f"{prefix}.pw1", PWCONV, b=batch, k=expan * c,
+                            c=c, ox=n, ibn_role="expand", ibn_id=i))
+        layers.append(Layer(f"{prefix}.act", ACT, b=batch, c=expan * c, ox=n,
+                            ibn_role="act", ibn_id=i))
+        layers.append(Layer(f"{prefix}.pw2", PWCONV, b=batch, k=c,
+                            c=expan * c, ox=n, ibn_role="project", ibn_id=i))
+
+    res = cfg.img_size
+    for si in range(4):
+        c = cfg.dims[si]
+        if si == 0:
+            res //= 4
+            layers.append(Layer("stem", CONV, b=batch, k=c,
+                                c=cfg.in_channels, ox=res, oy=res, fx=4,
+                                fy=4))
+        else:
+            cp = cfg.dims[si - 1]
+            layers.append(Layer(f"s{si}.down_ln", NORM, b=batch, c=cp,
+                                ox=res, oy=res))
+            res //= 2
+            layers.append(Layer(f"s{si}.down", CONV, b=batch, k=c, c=cp,
+                                ox=res, oy=res, fx=2, fy=2))
+        n_conv = cfg.depths[si] - cfg.sdta_blocks[si]
+        ks = cfg.kernel_sizes[si]
+        for bi in range(n_conv):
+            p = f"s{si}.conv{bi}"
+            layers.append(Layer(f"{p}.dw", DWCONV, b=batch, c=c, ox=res,
+                                oy=res, fx=ks, fy=ks))
+            layers.append(Layer(f"{p}.ln", NORM, b=batch, c=c, ox=res,
+                                oy=res))
+            ibn(p, res * res, c, cfg.expan_ratio)
+            layers.append(Layer(f"{p}.res", ELEMWISE, b=batch, c=c, ox=res,
+                                oy=res))
+        for bi in range(cfg.sdta_blocks[si]):
+            p = f"s{si}.sdta{bi}"
+            widths = _split_widths(c, cfg.sdta_scales[si])
+            for wi, w in enumerate(widths[1:]):
+                layers.append(Layer(f"{p}.dw{wi}", DWCONV, b=batch, c=w,
+                                    ox=res, oy=res, fx=3, fy=3))
+            n = res * res
+            dh = c // cfg.heads
+            layers.append(Layer(f"{p}.ln_x", NORM, b=batch, c=c, ox=n))
+            layers.append(Layer(f"{p}.qkv", PWCONV, b=batch, k=3 * c, c=c,
+                                ox=n))
+            # XCA: scores [C/h, C/h] = q [C/h, N] @ k^T [N, C/h] per head
+            layers.append(Layer(f"{p}.qk", MATMUL, b=batch * cfg.heads,
+                                k=dh, c=n, ox=dh))
+            layers.append(Layer(f"{p}.sm", SOFTMAX, b=batch * cfg.heads,
+                                c=dh, ox=dh))
+            layers.append(Layer(f"{p}.av", MATMUL, b=batch * cfg.heads,
+                                k=n, c=dh, ox=dh))
+            layers.append(Layer(f"{p}.proj", PWCONV, b=batch, k=c, c=c,
+                                ox=n))
+            layers.append(Layer(f"{p}.ln_m", NORM, b=batch, c=c, ox=n))
+            ibn(p, n, c, cfg.expan_ratio)
+            layers.append(Layer(f"{p}.res", ELEMWISE, b=batch, c=c, ox=n))
+    layers.append(Layer("head.ln", NORM, b=batch, c=cfg.dims[-1]))
+    layers.append(Layer("head.fc", PWCONV, b=batch, k=cfg.num_classes,
+                        c=cfg.dims[-1]))
+    return layers
+
+
+def total_macs(layers: List[Layer]) -> int:
+    return sum(l.macs for l in layers)
+
+
+def ibn_groups(layers: List[Layer]) -> List[Tuple[Layer, Layer, Layer]]:
+    """(expand, act, project) triples, in order."""
+    by_id: dict = {}
+    for l in layers:
+        if l.ibn_id >= 0:
+            by_id.setdefault(l.ibn_id, {})[l.ibn_role] = l
+    out = []
+    for i in sorted(by_id):
+        g = by_id[i]
+        if {"expand", "act", "project"} <= set(g):
+            out.append((g["expand"], g["act"], g["project"]))
+    return out

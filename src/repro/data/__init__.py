@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLMDataset, SyntheticSeq2SeqDataset
+
+__all__ = ["SyntheticLMDataset", "SyntheticSeq2SeqDataset"]

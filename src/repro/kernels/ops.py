@@ -1,0 +1,110 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Each wrapper pads inputs to kernel tile multiples, dispatches
+``interpret=True`` automatically on non-TPU backends (the kernels are
+written for TPU BlockSpec tiling; interpret mode executes the kernel body
+in Python for correctness validation on CPU), and unpads the result.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import (depthwise_conv as _dw, flash_attention as _fa,
+                           fused_ibn as _ibn, matmul_ln as _mln,
+                           rwkv_chunk as _wkv)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def fused_ibn(x: jax.Array, w1: jax.Array, w2: jax.Array,
+              wg: Optional[jax.Array] = None, *, activation: str = "gelu",
+              block_m: int = 256, block_f: int = 512,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """act(x @ w1 [* gate]) @ w2 for x of any leading shape [..., D]."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    M = xf.shape[0]
+    bm = min(block_m, M)
+    xp = _pad_to(xf, 0, bm)
+    bf = min(block_f, w1.shape[1])
+    w1p = _pad_to(w1, 1, bf)
+    w2p = _pad_to(w2, 0, bf)
+    wgp = _pad_to(wg, 1, bf) if wg is not None else None
+    out = _ibn.fused_ibn(xp, w1p, w2p, wgp, activation=activation,
+                         block_m=bm, block_f=bf, interpret=interp)
+    return out[:M].reshape(*lead, w2.shape[1])
+
+
+def matmul_ln(x: jax.Array, w: jax.Array, b: jax.Array, gamma: jax.Array,
+              beta: jax.Array, *, block_m: int = 256, block_k: int = 512,
+              eps: float = 1e-6,
+              interpret: Optional[bool] = None) -> jax.Array:
+    interp = (not _on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    xf = x.reshape(-1, K)
+    M = xf.shape[0]
+    bm = min(block_m, M)
+    xp = _pad_to(xf, 0, bm)
+    bk = min(block_k, K)
+    assert K % bk == 0, (K, bk)
+    out = _mln.matmul_ln(xp, w, b, gamma, beta, block_m=bm, block_k=bk,
+                         eps=eps, interpret=interp)
+    return out[:M].reshape(*lead, w.shape[1])
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, block_q: int = 512,
+                    block_k: int = 512,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    interp = (not _on_tpu()) if interpret is None else interpret
+    Sq, Sk = q.shape[2], k.shape[2]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    while Sq % bq:
+        bq //= 2
+    while Sk % bk:
+        bk //= 2
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, block_q=bq, block_k=bk,
+                               interpret=interp)
+
+
+def depthwise_conv2d(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                     block_c: int = 128,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    interp = (not _on_tpu()) if interpret is None else interpret
+    C = x.shape[-1]
+    bc = min(block_c, C)
+    while C % bc:
+        bc //= 2
+    return _dw.depthwise_conv2d(x, w, b, block_c=bc, interpret=interp)
+
+
+def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+                u: jax.Array, *, chunk: int = 64,
+                interpret: Optional[bool] = None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    T = r.shape[1]
+    c = min(chunk, T)
+    while T % c:
+        c //= 2
+    return _wkv.wkv_chunked(r, k, v, logw, u, chunk=c, interpret=interp)

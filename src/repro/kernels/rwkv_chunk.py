@@ -1,0 +1,112 @@
+"""Beyond-paper — chunked WKV6 state-update Pallas kernel (rwkv6 arch).
+
+The paper's C3 insight (produce a tile into local memory, consume it
+immediately, discard it) transfers to the RWKV-6 recurrence: within a
+chunk of T tokens the recurrence becomes three MXU matmuls plus a [C, C]
+intra-chunk score matrix; the [C, C, K] decay tensor and the [K, V]
+running state live only in VMEM and never round-trip HBM per token.
+
+Grid: (B*H, n_chunks), chunks innermost; the [K, V] state scratch carries
+across chunk steps (TPU grids execute sequentially).  Decay exponents are
+``exp(b_t - b_s)`` with t >= s and b a running cumsum of log-decays
+(<= 0), so every exponent is <= 0 — numerically safe.
+
+BlockSpecs:
+  r,k,w : (1, C, K) at (bh, c, 0)
+  v     : (1, C, V) at (bh, c, 0)
+  u     : (1, K)    at (bh, 0)     — per-head bonus, caller-expanded
+  out   : (1, C, V) at (bh, c, 0)
+  state : (1, K, V) at (bh, 0, 0)  — final state output
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref,
+                state_ref, *, n_chunks: int, C: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    rc = r_ref[0].astype(jnp.float32)              # [C, K]
+    kc = k_ref[0].astype(jnp.float32)
+    vc = v_ref[0].astype(jnp.float32)              # [C, V]
+    wc = w_ref[0].astype(jnp.float32)              # [C, K] log-decay <= 0
+    u = u_ref[0].astype(jnp.float32)               # [K]
+
+    b = jnp.cumsum(wc, axis=0)                     # [C, K]
+    b_prev = b - wc
+    S = state_ref[...]
+
+    # inter-chunk: r_t decayed to the chunk start, applied to carried state
+    inter = jnp.dot(rc * jnp.exp(b_prev), S,
+                    preferred_element_type=jnp.float32)        # [C, V]
+
+    # intra-chunk scores A[t,s] = sum_k r_t k_s exp(b_{t-1} - b_s), s < t
+    expo = jnp.exp(jnp.clip(b_prev[:, None, :] - b[None, :, :],
+                            max=0.0))              # [C, C, K]
+    A = jnp.einsum("tk,sk,tsk->ts", rc, kc, expo)
+    tri = jnp.tril(jnp.ones((C, C), jnp.bool_), k=-1)
+    A = jnp.where(tri, A, 0.0)
+    diag = jnp.sum(rc * u[None, :] * kc, axis=-1)  # [C]
+    intra = jnp.dot(A, vc, preferred_element_type=jnp.float32) \
+        + diag[:, None] * vc
+
+    o_ref[0] = (inter + intra).astype(o_ref.dtype)
+
+    # state update: S' = diag(exp(b_C)) S + (k_s exp(b_C - b_s))^T v
+    b_end = b[-1:, :]                              # [1, K]
+    k_dec = kc * jnp.exp(b_end - b)
+    state_ref[...] = jnp.exp(b_end[0])[:, None] * S + jnp.dot(
+        k_dec.T, vc, preferred_element_type=jnp.float32)
+
+    @pl.when(c == n_chunks - 1)
+    def _done():
+        s_out_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+                u: jax.Array, *, chunk: int = 64,
+                interpret: bool = False):
+    """r,k,logw: [BH, T, K]; v: [BH, T, V]; u: [BH, K].
+
+    Returns (out [BH, T, V] in r.dtype, final_state [BH, K, V] f32).
+    T must divide by ``chunk``.
+    """
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    C = min(chunk, T)
+    assert T % C == 0, (T, C)
+    n_chunks = T // C
+
+    out, state = pl.pallas_call(
+        functools.partial(_wkv_kernel, n_chunks=n_chunks, C=C),
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, C, K), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, C, K), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, C, V), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, C, K), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, K), lambda bh, c: (bh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, V), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, K, V), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, V), r.dtype),
+            jax.ShapeDtypeStruct((BH, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)
+    return out, state

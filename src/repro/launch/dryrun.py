@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the real step function (train_step for train
+shapes, prefill/serve steps for inference shapes), lowers it against
+ShapeDtypeStruct inputs with the production in/out shardings, compiles it
+for the 16x16 single-pod or 2x16x16 multi-pod mesh, and records
+``memory_analysis()`` / ``cost_analysis()`` / the parsed collective
+schedule to a JSON artifact consumed by the roofline benchmarks.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k
+  python -m repro.launch.dryrun --arch olmo-1b --shape decode_32k --multi-pod
+  python -m repro.launch.dryrun --list
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, applicable_shapes, get_config
+from repro.configs.base import SHAPES_BY_NAME
+from repro.core import hloanalysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import cache_specs, input_specs, param_specs
+from repro.models import actshard, get_module
+from repro.optim import AdamWState, warmup_cosine
+from repro.runtime import (batch_pspecs, cache_pspecs, model_param_pspecs,
+                           build_decode_step, build_prefill_step,
+                           build_train_step)
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _metrics_pspecs(tree):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               ibn_chunks: int = 0, extra_tag: str = "",
+               scan_unroll: int = 1,
+               collect_memory: bool = True,
+               hlo_out: str = "",
+               profile: str = "2d",
+               serve_bf16: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    actshard.set_mesh(mesh, profile)  # anchor activation shardings (models)
+    mod = get_module(cfg)
+    defs = mod.param_defs(cfg)
+    pspecs = model_param_pspecs(cfg, mesh, defs, profile=profile)
+    p_struct = param_specs(
+        cfg, serve_bf16=serve_bf16 and shape.kind == "decode")
+    batch_struct = input_specs(cfg, shape)
+    b_pspecs = batch_pspecs(cfg, mesh, batch_struct, profile)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        step = build_train_step(
+            cfg, lr_schedule=warmup_cosine(3e-4, 100, 10_000),
+            ibn_chunks=ibn_chunks, scan_unroll=scan_unroll)
+        opt_struct = AdamWState(
+            count=jax.ShapeDtypeStruct((), jnp.int32),
+            m=p_struct, v=p_struct)
+        opt_pspecs = AdamWState(count=P(), m=pspecs, v=pspecs)
+        out_shape = jax.eval_shape(step, p_struct, opt_struct, batch_struct)
+        metrics_ps = _metrics_pspecs(out_shape[2])
+        jitted = jax.jit(
+            step,
+            in_shardings=(_named(mesh, pspecs), _named(mesh, opt_pspecs),
+                          _named(mesh, b_pspecs)),
+            out_shardings=(_named(mesh, pspecs), _named(mesh, opt_pspecs),
+                           _named(mesh, metrics_ps)),
+            donate_argnums=(0, 1))
+        lowered = jitted.lower(p_struct, opt_struct, batch_struct)
+    elif shape.kind == "prefill":
+        step = build_prefill_step(cfg, decode_len=shape.seq_len,
+                                  scan_unroll=scan_unroll)
+        out_struct = jax.eval_shape(step, p_struct, batch_struct)
+        hid_ps = P(b_pspecs[next(iter(b_pspecs))][0], None)
+        out_ps = (hid_ps, cache_pspecs(cfg, mesh, out_struct[1], profile))
+        jitted = jax.jit(
+            step,
+            in_shardings=(_named(mesh, pspecs), _named(mesh, b_pspecs)),
+            out_shardings=_named(mesh, out_ps))
+        lowered = jitted.lower(p_struct, batch_struct)
+    else:  # decode
+        step = build_decode_step(cfg, scan_unroll=scan_unroll)
+        c_struct = cache_specs(cfg, shape)
+        c_pspecs = cache_pspecs(cfg, mesh, c_struct, profile)
+        tok_b = b_pspecs["tokens"][0]
+        logits_ps = P(tok_b, "model" if profile != "fsdp" else None)
+        out_ps = (P(tok_b), logits_ps, c_pspecs)
+        jitted = jax.jit(
+            step,
+            in_shardings=(_named(mesh, pspecs), _named(mesh, c_pspecs),
+                          _named(mesh, b_pspecs)),
+            out_shardings=_named(mesh, out_ps),
+            donate_argnums=(1,))
+        lowered = jitted.lower(p_struct, c_struct, batch_struct)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "ibn_chunks": ibn_chunks, "scan_unroll": scan_unroll,
+        "profile": profile, "serve_bf16": serve_bf16,
+    }
+    try:
+        ca = compiled.cost_analysis()
+        record["cost_analysis"] = {
+            k: v for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "bytes accessed", "transcendentals",
+                      "optimal_seconds")
+                or k.startswith("bytes accessed"))}
+    except Exception as e:                                    # noqa: BLE001
+        record["cost_analysis_error"] = str(e)
+    if collect_memory:
+        try:
+            ma = compiled.memory_analysis()
+            record["memory_analysis"] = {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "generated_code_bytes": ma.generated_code_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+            }
+        except Exception as e:                                # noqa: BLE001
+            record["memory_analysis_error"] = str(e)
+    try:
+        hlo = compiled.as_text()
+        if hlo_out:
+            Path(hlo_out).write_text(hlo)
+        colls = hloanalysis.parse_collectives(hlo)
+        record["collectives"] = {
+            op: {"count": st.count, "result_bytes": st.result_bytes,
+                 "operand_bytes": st.operand_bytes,
+                 "wire_bytes": st.wire_bytes(op)}
+            for op, st in colls.items()}
+        record["collective_wire_bytes"] = \
+            hloanalysis.collective_wire_bytes(colls)
+        record["hlo_bytes"] = len(hlo)
+    except Exception as e:                                    # noqa: BLE001
+        record["collectives_error"] = str(e)
+    if extra_tag:
+        record["tag"] = extra_tag
+    return record
+
+
+def _scan_trip_count(arch: str) -> int:
+    """Iterations of the layer scan (1 when layers are a python loop)."""
+    cfg = get_config(arch)
+    if cfg.family == "hybrid":        # recurrentgemma: unrolled python loop
+        return 1
+    return cfg.num_layers
+
+
+def analyse_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                 ibn_chunks: int = 0, extra_tag: str = "",
+                 profile: str = "2d",
+                 serve_bf16: bool = False) -> Dict[str, Any]:
+    """Lower twice (scan unroll=1 and unroll=2) and correct for XLA's
+    cost_analysis counting while-loop bodies ONCE instead of x trip_count:
+
+        corrected = u1 + (trip - 1) * max(u2 - u1, 0)
+
+    The u2-u1 delta isolates exactly one extra scan body (flops, bytes,
+    collective traffic); everything outside the loop cancels.
+    """
+    rec = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                     ibn_chunks=ibn_chunks, extra_tag=extra_tag,
+                     scan_unroll=1, profile=profile, serve_bf16=serve_bf16)
+    trip = _scan_trip_count(arch)
+    if trip > 1:
+        rec2 = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                          ibn_chunks=ibn_chunks, scan_unroll=2,
+                          collect_memory=False, profile=profile,
+                          serve_bf16=serve_bf16)
+        corr: Dict[str, Any] = {}
+        ca1 = rec.get("cost_analysis", {})
+        ca2 = rec2.get("cost_analysis", {})
+        for k in ("flops", "bytes accessed", "transcendentals"):
+            if k in ca1 and k in ca2:
+                corr[k] = ca1[k] + (trip - 1) * max(ca2[k] - ca1[k], 0.0)
+        w1 = rec.get("collective_wire_bytes", 0.0)
+        w2 = rec2.get("collective_wire_bytes", 0.0)
+        corr["collective_wire_bytes"] = w1 + (trip - 1) * max(w2 - w1, 0.0)
+        corr["trip_count"] = trip
+        rec["corrected"] = corr
+        rec["u2_cost_analysis"] = ca2
+        rec["u2_collective_wire_bytes"] = w2
+    else:
+        ca1 = rec.get("cost_analysis", {})
+        rec["corrected"] = {
+            **{k: ca1[k] for k in
+               ("flops", "bytes accessed", "transcendentals") if k in ca1},
+            "collective_wire_bytes": rec.get("collective_wire_bytes", 0.0),
+            "trip_count": 1,
+        }
+    return rec
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool,
+              tag: str = "") -> Path:
+    mesh = "pod2" if multi_pod else "pod1"
+    suffix = f"-{tag}" if tag else ""
+    return ARTIFACT_DIR / f"{arch}__{shape}__{mesh}{suffix}.json"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ibn-chunks", type=int, default=0)
+    ap.add_argument("--profile", default="2d", choices=["2d", "fsdp", "tp", "cp"])
+    ap.add_argument("--serve-bf16", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    for arch in ([args.arch] if args.arch else sorted(ARCHS)):
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            if args.shape and shape.name != args.shape:
+                continue
+            cells.append((arch, shape.name))
+
+    if args.list:
+        for c in cells:
+            print(*c)
+        return
+
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    for arch, shape in cells:
+        out = cell_path(arch, shape, args.multi_pod, args.tag)
+        if out.exists() and not args.force:
+            print(f"skip {out.name} (exists)")
+            continue
+        print(f"=== {arch} x {shape} "
+              f"({'2x16x16' if args.multi_pod else '16x16'}) ===", flush=True)
+        rec = analyse_cell(arch, shape, multi_pod=args.multi_pod,
+                           ibn_chunks=args.ibn_chunks, extra_tag=args.tag,
+                           profile=args.profile, serve_bf16=args.serve_bf16)
+        out.write_text(json.dumps(rec, indent=1))
+        ca = rec.get("corrected", {})
+        ma = rec.get("memory_analysis", {})
+        print(f"  compile={rec['compile_s']}s flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e} "
+              f"coll={ca.get('collective_wire_bytes', 0):.3e} "
+              f"temp={ma.get('temp_bytes', 0):.3e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

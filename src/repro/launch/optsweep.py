@@ -1,0 +1,71 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Optimized dry-run sweep: per-(arch x shape) sharding profiles chosen by
+the SPerf hillclimb (EXPERIMENTS.md):
+
+  train/prefill, dense-like archs : 'fsdp'  (TP all-reduces dominated ->
+                                    whole mesh as one ZeRO axis)
+  train/prefill, MoE archs        : '2d'    (EP needs the model axis; the
+                                    shard-local MoE dispatch rides it)
+  decode / long-context           : 'tp' + bf16 weights (serving layout —
+                                    no per-token FSDP gathers; params read
+                                    in bf16)
+
+Artifacts are tagged ``-opt`` next to the baselines.
+"""
+import argparse
+import json
+
+from repro.configs import ARCHS, applicable_shapes, get_config
+from repro.launch.dryrun import ARTIFACT_DIR, analyse_cell, cell_path
+
+
+def cell_plan(arch: str, shape_kind: str) -> dict:
+    cfg = get_config(arch)
+    if shape_kind == "decode":
+        return dict(profile="tp", serve_bf16=True)
+    if shape_kind == "prefill":
+        # prefill batch (32) cannot fill the whole mesh as a dp axis —
+        # 'fsdp' was measured to WASTE the model axis (16x per-device
+        # compute, starcoder2: 0.71s -> 10.2s); TP splits the compute.
+        return dict(profile="2d", serve_bf16=False)
+    if cfg.moe.enabled:
+        return dict(profile="2d", serve_bf16=False)   # EP needs model axis
+    return dict(profile="fsdp", serve_bf16=False)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    for arch in ([args.arch] if args.arch else sorted(ARCHS)):
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            out = cell_path(arch, shape.name, args.multi_pod, "opt")
+            if out.exists() and not args.force:
+                print(f"skip {out.name}")
+                continue
+            plan = cell_plan(arch, shape.kind)
+            print(f"=== {arch} x {shape.name} {plan} "
+                  f"({'2x16x16' if args.multi_pod else '16x16'}) ===",
+                  flush=True)
+            rec = analyse_cell(arch, shape.name, multi_pod=args.multi_pod,
+                               extra_tag="opt", **plan)
+            out.write_text(json.dumps(rec, indent=1))
+            ca = rec.get("corrected", {})
+            ma = rec.get("memory_analysis", {})
+            print(f"  compile={rec['compile_s']}s "
+                  f"flops={ca.get('flops', 0):.3e} "
+                  f"coll={ca.get('collective_wire_bytes', 0):.3e} "
+                  f"temp={ma.get('temp_bytes', 0):.3e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Expert-parallel MoE with shard-local dispatch (hillclimb for the MoE
+collective storm — see EXPERIMENTS.md §Perf).
+
+The pjit/GSPMD lowering of the capacity-based scatter dispatch re-shards
+the data-dependent scatter/gather to replicated: the qwen3 train cell
+showed a 68.7 GB u32 all-gather PER LAYER in the scatter transpose
+(~3.4 TB/step corrected).  This module reformulates the layer under
+``jax.shard_map`` so the dispatch never crosses a device boundary:
+
+  per data shard (token shard):
+    router -> top_k -> capacity scatter into a LOCAL [E, C_loc, d] buffer
+    (pure local ops — zero collectives)
+  per model shard (expert shard):
+    slice the 8/16 local experts, run the expert FFN on the MXU
+  combine:
+    each model shard emits partial outputs for its experts' tokens,
+    shared-expert partials (ff sharded over model) add in,
+    ONE all-reduce over 'model' produces the full [N_loc, d] output.
+
+Collectives per layer: 1 fwd all-reduce [N_loc, d] (+ its transpose in
+bwd) — the same wire profile as a dense Megatron FFN block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _act(name: str, x):
+    if name in ("swiglu", "silu"):
+        return jax.nn.silu(x)
+    if name in ("gelu", "geglu"):
+        return jax.nn.gelu(x, approximate=True)
+    r = jnp.maximum(x, 0.0)
+    return r * r
+
+
+def _local_moe(cfg: ModelConfig, capacity_factor: float, tp: int,
+               dp_axes: Tuple[str, ...],
+               x, router, wi, wo, wg, shared_wi, shared_wo, shared_wg,
+               shared_gate):
+    """Body executed per (data x model) shard under shard_map.
+
+    x: [N_loc, d] (token shard, replicated over model)
+    router: [d, E] replicated
+    wi/wo/wg: [E/tp, ...] expert shard
+    shared_*: [d, f/tp] / [f/tp, d] ff shard (or None)
+    Returns (out [N_loc, d] — full value after psum, aux scalar).
+    """
+    m = cfg.moe
+    e_pad, e_real, k = m.num_experts_padded, m.num_experts, m.top_k
+    n = x.shape[0]
+    d = x.shape[1]
+    dtype = x.dtype
+    e_per = e_pad // tp
+    capacity = int(max(1, (k * n * capacity_factor) // e_pad))
+
+    # ---- routing (identical on every model shard; local on data shard)
+    logits = (x @ router.astype(dtype)).astype(jnp.float32)
+    if e_pad > e_real:
+        pad_mask = lax.iota(jnp.int32, e_pad) >= e_real
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = lax.top_k(probs, k)              # [N, k]
+    if m.norm_topk_prob:
+        gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # aux loss over the LOCAL token shard (then averaged over dp)
+    me = probs[:, :e_real].mean(axis=0)
+    ce = jnp.zeros((e_pad,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (n * k))[:e_real]
+    aux = e_real * jnp.sum(me * ce)
+    for ax in dp_axes:
+        aux = lax.pmean(aux, ax)
+
+    # ---- capacity-bounded dispatch: ALL LOCAL (the point of this module)
+    flat_e = expert_idx.reshape(-1)                          # [N*k]
+    onehot = jnp.zeros((n * k, e_pad), jnp.int32).at[
+        jnp.arange(n * k), flat_e].set(1)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)[jnp.arange(n * k), flat_e]
+    keep = pos < capacity
+    slot = jnp.where(keep, flat_e * capacity + pos, e_pad * capacity)
+    # single scatter ([N*k, d] source): a k-sliced scatter loop was tried
+    # and REFUTED — each .at[].set copies the [E*C, d] buffer (8x temp
+    # blow-up, see EXPERIMENTS.md SPerf iteration A2a)
+    token_idx = jnp.repeat(jnp.arange(n), k)
+    buf = jnp.zeros((e_pad * capacity, d), dtype).at[slot].set(
+        x[token_idx], mode="drop")
+    buf = buf.reshape(e_pad, capacity, d)
+    flat_e = flat_e.reshape(n, k)
+    pos = pos.reshape(n, k)
+    keep = keep.reshape(n, k)
+    slot = slot.reshape(n, k)
+
+    # ---- expert FFN on this model shard's experts only
+    e0 = lax.axis_index("model") * e_per
+    buf_l = lax.dynamic_slice_in_dim(buf, e0, e_per, axis=0)
+    h = jnp.einsum("ecd,edf->ecf", buf_l, wi.astype(dtype))
+    if wg is not None:
+        g = jnp.einsum("ecd,edf->ecf", buf_l, wg.astype(dtype))
+        h = _act(cfg.mlp, g) * h
+    else:
+        h = _act(cfg.mlp, h)
+    eo = jnp.einsum("ecf,efd->ecd", h, wo.astype(dtype))
+    eo_flat = eo.reshape(e_per * capacity, d)
+
+    # ---- combine: partials for tokens routed to THIS shard's experts
+    # (k-sliced: peak temp [N, d])
+    out = jnp.zeros((n, d), dtype)
+    for j in range(k):
+        in_shard = (flat_e[:, j] >= e0) & (flat_e[:, j] < e0 + e_per) \
+            & keep[:, j]
+        local_slot = jnp.where(in_shard,
+                               (flat_e[:, j] - e0) * capacity + pos[:, j],
+                               e_per * capacity - 1)
+        gathered = jnp.take(eo_flat, local_slot, axis=0)
+        gathered = jnp.where(in_shard[:, None], gathered, 0.0)
+        out = out + gathered * gate_vals[:, j:j + 1].astype(dtype)
+
+    # ---- shared experts: ff dim sharded over model — partials fold into
+    # the same all-reduce
+    if shared_wi is not None:
+        hs = x @ shared_wi.astype(dtype)
+        if shared_wg is not None:
+            hs = _act(cfg.mlp, x @ shared_wg.astype(dtype)) * hs
+        else:
+            hs = _act(cfg.mlp, hs)
+        so = hs @ shared_wo.astype(dtype)
+        if shared_gate is not None:
+            sg = jax.nn.sigmoid(
+                (x @ shared_gate.astype(dtype)).astype(jnp.float32))
+            so = so * sg.astype(dtype)
+        out = out + so
+
+    out = lax.psum(out, "model")                              # THE collective
+    return out, aux
+
+
+def moe_apply_sharded(cfg: ModelConfig, params: Params, x: jax.Array, *,
+                      mesh: Mesh, capacity_factor: float = 1.25
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """shard_map MoE layer.  x: [..., N, d] with batch over the dp axes."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    m = cfg.moe
+    assert m.num_experts_padded % tp == 0
+
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+
+    gated = "wg" in params
+    has_shared = "shared" in params
+    shared = params.get("shared", {})
+
+    body = functools.partial(_local_moe, cfg, capacity_factor, tp, dp_axes)
+
+    dp = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    tok_spec = P(dp, None)
+    rep = P(None, None)
+    exp_spec = P("model", None, None)
+    ff_in = P(None, "model")
+    ff_out = P("model", None)
+
+    args = [xt, params["router"],
+            params["wi"], params["wo"],
+            params.get("wg"),
+            shared.get("wi"), shared.get("wo"), shared.get("wg"),
+            params.get("shared_gate")]
+    specs = [tok_spec, rep, exp_spec, exp_spec,
+             exp_spec if gated else P(),
+             ff_in if has_shared else P(),
+             ff_out if has_shared else P(),
+             ff_in if (has_shared and gated) else P(),
+             rep if "shared_gate" in params else P()]
+    # replace None args with dummy zeros (shard_map needs real arrays);
+    # the body checks for zero-size sentinels instead of None
+    call_args = []
+    call_specs = []
+    flags = dict(wg=gated, shared=has_shared,
+                 shared_gate="shared_gate" in params)
+
+    def wrapped(x_, router_, wi_, wo_, *rest):
+        it = iter(rest)
+        wg_ = next(it) if flags["wg"] else None
+        swi = next(it) if flags["shared"] else None
+        swo = next(it) if flags["shared"] else None
+        swg = next(it) if (flags["shared"] and gated) else None
+        sg = next(it) if flags["shared_gate"] else None
+        return body(x_, router_, wi_, wo_, wg_, swi, swo, swg, sg)
+
+    for a, s in zip(args, specs):
+        if a is not None:
+            call_args.append(a)
+            call_specs.append(s)
+
+    out, aux = jax.shard_map(
+        wrapped, mesh=mesh,
+        in_specs=tuple(call_specs),
+        out_specs=(tok_spec, P()),
+        check_vma=False)(*call_args)
+    return out.reshape(orig_shape), aux

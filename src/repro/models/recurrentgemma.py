@@ -1,0 +1,302 @@
+"""RecurrentGemma / Griffin hybrid [arXiv:2402.19427].
+
+Block pattern (recurrent, recurrent, attention): RG-LRU diagonal linear
+recurrence + causal depthwise temporal conv (width 4) in recurrent blocks,
+local sliding-window MQA in attention blocks, GeGLU MLP everywhere.
+
+TPU adaptation: the RG-LRU is evaluated with ``lax.associative_scan``
+(log-depth parallel prefix) for train/prefill and a single fused step for
+decode.  The temporal depthwise conv is the one place the paper's C1
+``C|FX`` dataflow applies to the LM pool (see kernels/depthwise_conv.py).
+
+Simplification vs. the released checkpoints (documented in DESIGN.md):
+the RG-LRU input/recurrence gates use full [W, W] projections instead of
+block-diagonal per-head projections.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import actshard
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+Params = Dict[str, Any]
+
+LRU_C = 8.0  # Griffin's fixed gate temperature
+
+
+class RGCache(NamedTuple):
+    """Per-layer decode state (heterogeneous across the block pattern)."""
+    rec_h: Any        # list-indexed [B, W] f32 per recurrent layer
+    conv_state: Any   # [B, conv_width-1, W] per recurrent layer
+    attn_k: Any       # [B, 1, window, D] per attention layer
+    attn_v: Any
+    step: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions (unrolled layers — heterogeneous pattern)
+# ---------------------------------------------------------------------------
+
+
+def _recurrent_defs(cfg: ModelConfig) -> Params:
+    d, w = cfg.d_model, cfg.lru_width
+    cw = cfg.conv1d_width
+    return {
+        "wy": ParamDef((d, w), ("embed", "ff")),
+        "wx": ParamDef((d, w), ("embed", "ff")),
+        "conv_w": ParamDef((cw, w), (None, "ff")),
+        "conv_b": ParamDef((w,), ("ff",), "zeros"),
+        "gate_i": ParamDef((w, w), (None, "ff")),
+        "gate_i_b": ParamDef((w,), ("ff",), "zeros"),
+        "gate_r": ParamDef((w, w), (None, "ff")),
+        "gate_r_b": ParamDef((w,), ("ff",), "zeros"),
+        "lam": ParamDef((w,), ("ff",), "uniform_decay"),
+        "wo": ParamDef((w, d), ("ff", "embed")),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> Params:
+    blocks: List[Params] = []
+    for kind in cfg.block_pattern:
+        b: Params = {"ln1": L.norm_defs(cfg), "ln2": L.norm_defs(cfg),
+                     "mlp": L.mlp_defs(cfg)}
+        if kind == "recurrent":
+            b["rec"] = _recurrent_defs(cfg)
+        else:
+            b["attn"] = L.attention_defs(cfg)
+        blocks.append(b)
+    return {
+        "embed": L.embedding_defs(cfg),
+        "blocks": blocks,
+        "ln_f": L.norm_defs(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def rg_lru(rec: Params, u: jax.Array, h0: Optional[jax.Array] = None):
+    """u: [B,T,W].  Returns (y [B,T,W], h_last [B,W] f32)."""
+    dtype = u.dtype
+    uf = u.astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(uf @ rec["gate_i"].astype(jnp.float32)
+                            + rec["gate_i_b"].astype(jnp.float32))
+    r_gate = jax.nn.sigmoid(uf @ rec["gate_r"].astype(jnp.float32)
+                            + rec["gate_r_b"].astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(rec["lam"].astype(jnp.float32)) * r_gate
+    a = jnp.exp(log_a)                                       # (0,1)
+    gated = i_gate * uf
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+
+    if h0 is not None:
+        # fold the incoming state into the first step
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(dtype), h[:, -1, :]
+
+
+def rg_lru_step(rec: Params, u: jax.Array, h: jax.Array):
+    """Single decode step.  u: [B,W]; h: [B,W] f32."""
+    uf = u.astype(jnp.float32)
+    i_gate = jax.nn.sigmoid(uf @ rec["gate_i"].astype(jnp.float32)
+                            + rec["gate_i_b"].astype(jnp.float32))
+    r_gate = jax.nn.sigmoid(uf @ rec["gate_r"].astype(jnp.float32)
+                            + rec["gate_r_b"].astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(rec["lam"].astype(jnp.float32)) * r_gate
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i_gate * uf)
+    h_new = a * h + b
+    return h_new.astype(u.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Temporal depthwise conv (causal, width cw)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(rec: Params, x: jax.Array,
+                  state: Optional[jax.Array] = None):
+    """x: [B,T,W]; state: [B,cw-1,W] trailing context (decode) or None.
+    Returns (y [B,T,W], new_state [B,cw-1,W])."""
+    w = rec["conv_w"].astype(x.dtype)                        # [cw, W]
+    b = rec["conv_b"].astype(x.dtype)
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (cw - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                   # [B,T+cw-1,W]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(cw)) + b
+    new_state = xp[:, xp.shape[1] - (cw - 1):, :]
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _recurrent_block(cfg: ModelConfig, rec: Params, u: jax.Array):
+    """Full-sequence recurrent mixing block (no incoming state)."""
+    dtype = u.dtype
+    y_branch = jax.nn.gelu(u @ rec["wy"].astype(dtype))
+    x_branch = u @ rec["wx"].astype(dtype)
+    x_branch, new_conv = causal_conv1d(rec, x_branch)
+    x_branch, h_last = rg_lru(rec, x_branch)
+    out = (y_branch * x_branch) @ rec["wo"].astype(dtype)
+    return out, h_last, new_conv
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, Any], *,
+            use_flash: bool = True, remat: bool = True,
+            **_) -> Tuple[jax.Array, jax.Array]:
+    x = L.embed_tokens(params["embed"], batch["tokens"], cfg.compute_dtype)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    x = actshard.batch_sharded(x)
+    for kind, bp in zip(cfg.block_pattern, params["blocks"]):
+        def block_fn(x, bp=bp, kind=kind):
+            x = actshard.batch_sharded(x)
+            h = L.norm_apply(cfg, bp["ln1"], x)
+            if kind == "recurrent":
+                h, _, _ = _recurrent_block(cfg, bp["rec"], h)
+            else:
+                h = L.attention_apply(cfg, bp["attn"], h, positions,
+                                      window=cfg.window, use_flash=use_flash)
+            x = x + h
+            h = L.norm_apply(cfg, bp["ln2"], x)
+            return x + L.mlp_apply(cfg, bp["mlp"], h)
+        if remat:
+            block_fn = jax.checkpoint(block_fn, prevent_cse=False)
+        x = block_fn(x)
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    return x, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def logits_fn(cfg: ModelConfig, params: Params, hidden: jax.Array):
+    return actshard.logits_sharded(L.lm_logits(params["embed"], hidden))
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> RGCache:
+    W = min(cfg.window or seq_len, seq_len)
+    rec_h, conv_state, attn_k, attn_v = [], [], [], []
+    for kind in cfg.block_pattern:
+        if kind == "recurrent":
+            rec_h.append(jnp.zeros((batch, cfg.lru_width), jnp.float32))
+            conv_state.append(jnp.zeros(
+                (batch, cfg.conv1d_width - 1, cfg.lru_width),
+                cfg.compute_dtype))
+        else:
+            attn_k.append(jnp.zeros(
+                (batch, cfg.num_kv_heads, W, cfg.head_dim), cfg.compute_dtype))
+            attn_v.append(jnp.zeros(
+                (batch, cfg.num_kv_heads, W, cfg.head_dim), cfg.compute_dtype))
+    return RGCache(rec_h=rec_h, conv_state=conv_state, attn_k=attn_k,
+                   attn_v=attn_v, step=jnp.zeros((), jnp.int32))
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, Any],
+            use_flash: bool = True, scan_unroll: int = 1,
+            **_) -> Tuple[jax.Array, RGCache]:
+    from repro.models.transformer import _to_ring
+
+    x = L.embed_tokens(params["embed"], batch["tokens"], cfg.compute_dtype)
+    B, S = x.shape[0], x.shape[1]
+    W = min(cfg.window or S, S)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    rec_h, conv_state, attn_k, attn_v = [], [], [], []
+
+    for kind, bp in zip(cfg.block_pattern, params["blocks"]):
+        h = L.norm_apply(cfg, bp["ln1"], x)
+        if kind == "recurrent":
+            dtype = h.dtype
+            y_branch = jax.nn.gelu(h @ bp["rec"]["wy"].astype(dtype))
+            x_branch = h @ bp["rec"]["wx"].astype(dtype)
+            x_branch, cst = causal_conv1d(bp["rec"], x_branch)
+            x_branch, h_last = rg_lru(bp["rec"], x_branch)
+            h = (y_branch * x_branch) @ bp["rec"]["wo"].astype(dtype)
+            rec_h.append(h_last)
+            conv_state.append(cst)
+        else:
+            q, k, v = L.qkv_project(cfg, bp["attn"], h, positions)
+            G = cfg.q_per_kv
+            kr = jnp.repeat(k, G, axis=1) if G > 1 else k
+            vr = jnp.repeat(v, G, axis=1) if G > 1 else v
+            if use_flash and cfg.window is not None and cfg.window < S:
+                o = attn_lib.flash_attention_banded(q, kr, vr, cfg.window)
+            elif use_flash:
+                o = attn_lib.flash_attention(q, kr, vr, True, cfg.window)
+            else:
+                o = attn_lib.reference_attention(q, kr, vr, causal=True,
+                                                 window=cfg.window)
+            o = actshard.attn_out_sharded(o)  # see layers.attention_apply
+            h = actshard.batch_sharded(
+                L.out_project(bp["attn"], o, x.dtype))
+            attn_k.append(_to_ring(k, W) if W < S else k)
+            attn_v.append(_to_ring(v, W) if W < S else v)
+        x = x + h
+        h = L.norm_apply(cfg, bp["ln2"], x)
+        x = x + L.mlp_apply(cfg, bp["mlp"], h)
+
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    cache = RGCache(rec_h=rec_h, conv_state=conv_state, attn_k=attn_k,
+                    attn_v=attn_v, step=jnp.array(S, jnp.int32))
+    return x[:, -1, :], cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: RGCache,
+                batch: Dict[str, Any], *, scan_unroll: int = 1,
+                **_) -> Tuple[jax.Array, RGCache]:
+    x = L.embed_tokens(params["embed"], batch["tokens"], cfg.compute_dtype)
+    step = cache.step
+    rec_h, conv_state = list(cache.rec_h), list(cache.conv_state)
+    attn_k, attn_v = list(cache.attn_k), list(cache.attn_v)
+    ri = ai = 0
+
+    for kind, bp in zip(cfg.block_pattern, params["blocks"]):
+        h = L.norm_apply(cfg, bp["ln1"], x)
+        if kind == "recurrent":
+            dtype = h.dtype
+            y_branch = jax.nn.gelu(h @ bp["rec"]["wy"].astype(dtype))
+            x_branch = h @ bp["rec"]["wx"].astype(dtype)
+            x_branch, conv_state[ri] = causal_conv1d(
+                bp["rec"], x_branch, conv_state[ri])
+            x_step, rec_h[ri] = rg_lru_step(bp["rec"], x_branch[:, 0, :],
+                                            rec_h[ri])
+            h = (y_branch * x_step[:, None, :]) @ bp["rec"]["wo"].astype(dtype)
+            ri += 1
+        else:
+            h, attn_k[ai], attn_v[ai] = L.attention_decode_apply(
+                cfg, bp["attn"], h, step, attn_k[ai], attn_v[ai], step,
+                window=cfg.window)
+            ai += 1
+        x = x + h
+        h = L.norm_apply(cfg, bp["ln2"], x)
+        x = x + L.mlp_apply(cfg, bp["mlp"], h)
+
+    x = L.norm_apply(cfg, params["ln_f"], x)
+    logits = L.lm_logits(params["embed"], x)[:, 0, :]
+    return logits, RGCache(rec_h=rec_h, conv_state=conv_state, attn_k=attn_k,
+                           attn_v=attn_v, step=step + 1)

@@ -1,0 +1,9 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import constant_schedule, warmup_cosine
+from repro.optim.clip import clip_by_global_norm, global_norm
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update",
+    "constant_schedule", "warmup_cosine",
+    "clip_by_global_norm", "global_norm",
+]

@@ -1,0 +1,65 @@
+"""AdamW as pure pytree functions.
+
+State shards identically to the parameters (the param pspec tree is reused
+leaf-for-leaf for ``m``/``v``), which under the 2-D (FSDP x TP) param
+sharding gives ZeRO-style optimizer-state partitioning for free: no chip
+ever holds more than 1/(data*model) of the moments.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array   # scalar int32
+    m: Pytree          # first moment  (like params)
+    v: Pytree          # second moment (like params)
+
+
+def adamw_init(params: Pytree) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    return AdamWState(count=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(lambda p: jnp.zeros_like(p), params))
+
+
+def adamw_update(
+    grads: Pytree,
+    state: AdamWState,
+    params: Pytree,
+    *,
+    lr: jax.Array | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Pytree, AdamWState]:
+    """Returns (new_params, new_state)."""
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g
+        v = b2 * v + (1.0 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p
+        return (p - lr * step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(count=count, m=new_m, v=new_v)

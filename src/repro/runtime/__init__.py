@@ -1,0 +1,19 @@
+from repro.runtime.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    dp_axes,
+    mesh_axis_sizes,
+    model_param_pspecs,
+)
+from repro.runtime.steps import (
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+    loss_from_logits,
+)
+
+__all__ = [
+    "batch_pspecs", "cache_pspecs", "dp_axes", "mesh_axis_sizes",
+    "model_param_pspecs", "build_decode_step", "build_prefill_step",
+    "build_train_step", "loss_from_logits",
+]

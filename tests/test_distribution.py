@@ -1,0 +1,155 @@
+"""Distribution-layer tests: sharded MoE correctness, sharding profiles,
+activation anchors.  Multi-device cases run in a subprocess (the device
+count is locked at first jax init; the main test process stays 1-device).
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import get_module, params as param_lib
+from repro.runtime.sharding import PROFILES
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
+
+
+def _run(code: str) -> str:
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=ENV,
+                       cwd="/root/repo", timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def test_sharded_moe_matches_plain_multidevice():
+    """On a model-only mesh the shard-local MoE must equal the pjit MoE
+    bit-for-tolerance (same capacity, same routing)."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config, reduced
+        from repro.models import layers as L, params as P
+        from repro.models.moe_sharded import moe_apply_sharded
+        # model=4 divides the 4 padded experts of the reduced configs;
+        # data=1 keeps per-shard capacity equal to the global capacity so
+        # the comparison is exact
+        mesh = jax.make_mesh((1, 4), ("data", "model"))
+        for arch in ('qwen3-moe-30b-a3b', 'qwen2-moe-a2.7b'):
+            cfg = reduced(get_config(arch))
+            pr = P.init_params(jax.random.PRNGKey(0), L.moe_defs(cfg))
+            x = jax.random.normal(jax.random.PRNGKey(1),
+                                  (2, 16, cfg.d_model))
+            o1, a1 = jax.jit(lambda p, x: L.moe_apply(cfg, p, x))(pr, x)
+            o2, a2 = jax.jit(lambda p, x: moe_apply_sharded(
+                cfg, p, x, mesh=mesh))(pr, x)
+            np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                       rtol=3e-4, atol=3e-4)
+            np.testing.assert_allclose(float(a1), float(a2), rtol=1e-4)
+            print(arch, "OK")
+    """)
+    assert out.count("OK") == 2
+
+
+def test_sharded_moe_grads_multidevice():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config, reduced
+        from repro.models import layers as L, params as P
+        from repro.models.moe_sharded import moe_apply_sharded
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = reduced(get_config('qwen3-moe-30b-a3b'))
+        pr = P.init_params(jax.random.PRNGKey(0), L.moe_defs(cfg))
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        g = jax.jit(jax.grad(lambda p: moe_apply_sharded(
+            cfg, p, x, mesh=mesh)[0].sum()))(pr)
+        for k in ('router', 'wi', 'wo'):
+            n = float(jnp.linalg.norm(g[k]))
+            assert n > 0 and jnp.isfinite(n), (k, n)
+        print("grads OK")
+    """)
+    assert "grads OK" in out
+
+
+def test_train_step_on_2d_mesh_multidevice():
+    """A full train step with explicit shardings on a (2, 4) mesh."""
+    out = _run("""
+        import dataclasses, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config, reduced, SHAPES_BY_NAME
+        from repro.launch.specs import input_specs
+        from repro.models import actshard, get_module, params as PL
+        from repro.optim import AdamWState, adamw_init, warmup_cosine
+        from repro.runtime import (batch_pspecs, build_train_step,
+                                   model_param_pspecs)
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        actshard.set_mesh(mesh)
+        cfg = reduced(get_config('h2o-danube-1.8b'))
+        mod = get_module(cfg)
+        defs = mod.param_defs(cfg)
+        pspecs = model_param_pspecs(cfg, mesh, defs)
+        named = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        params = jax.jit(lambda k: PL.init_params(k, defs),
+                         out_shardings=named(pspecs))(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        shape = dataclasses.replace(SHAPES_BY_NAME['train_4k'],
+                                    seq_len=32, global_batch=4)
+        struct = input_specs(cfg, shape)
+        bp = batch_pspecs(cfg, mesh, struct)
+        batch = {k: jnp.zeros(s.shape, s.dtype) for k, s in struct.items()}
+        step = jax.jit(build_train_step(
+            cfg, lr_schedule=warmup_cosine(1e-3, 2, 10)),
+            in_shardings=(named(pspecs),
+                          named(AdamWState(count=P(), m=pspecs, v=pspecs)),
+                          named(bp)))
+        p2, o2, m = step(params, opt, batch)
+        assert jnp.isfinite(m['loss'])
+        print("loss", float(m['loss']))
+    """)
+    assert "loss" in out
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("profile", PROFILES)
+def test_param_pspecs_all_profiles(arch, profile):
+    """Every arch x profile yields divisible pspecs on the 16x16 mesh
+    (checked without devices via rule-size arithmetic)."""
+    cfg = get_config(arch)
+    defs = get_module(cfg).param_defs(cfg)
+    sizes = {"data": 16, "model": 16}
+    if profile == "fsdp":
+        fsdp_axes, tp_axis = ("data", "model"), None
+    elif profile == "tp":
+        fsdp_axes, tp_axis = None, "model"
+    elif profile == "cp":
+        fsdp_axes, tp_axis = "data", None
+    else:
+        fsdp_axes, tp_axis = "data", "model"
+    rules = param_lib.resolve_rules(
+        sizes, kv_heads=cfg.num_kv_heads, num_heads=cfg.num_heads,
+        fsdp=fsdp_axes is not None, fsdp_axes=fsdp_axes, tp_axis=tp_axis)
+
+    def demote(d: param_lib.ParamDef):
+        for ax, dim in zip(d.axes, d.shape):
+            r = rules.get(ax or "null")
+            if r is not None and dim % param_lib._rule_size(r, sizes) != 0:
+                rules[ax] = None
+    param_lib.tree_map_defs(demote, defs)
+    param_lib.validate_pspecs(defs, rules, sizes)
+    # fsdp profile: no tensor-parallel rules may survive
+    if profile == "fsdp":
+        for k in ("ff", "heads", "vocab", "expert"):
+            assert rules[k] is None
+
+
+def test_actshard_noop_without_mesh(key):
+    from repro.models import actshard
+    actshard.set_mesh(None)
+    x = jax.random.normal(key, (4, 8))
+    y = actshard.batch_sharded(x)
+    assert y is x

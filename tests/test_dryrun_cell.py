@@ -1,0 +1,34 @@
+"""Deliverable (e) lock: one real dry-run cell lowers + compiles on the
+512-placeholder-device production mesh in a subprocess, producing a
+roofline-complete artifact (this is the machinery the 66-cell sweeps
+use; one cheap decode cell keeps it from regressing)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+
+
+def test_dryrun_single_cell(tmp_path):
+    code = f"""
+import repro.launch.dryrun as dr
+import json
+rec = dr.analyse_cell('olmo-1b', 'decode_32k', multi_pod=False,
+                      profile='tp', serve_bf16=True)
+Path = __import__('pathlib').Path
+Path({str(repr(str(tmp_path)))}, 'cell.json').write_text(
+    json.dumps(rec))
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=ENV, cwd="/root/repo", timeout=580)
+    assert r.returncode == 0, r.stderr[-3000:]
+    rec = json.loads((tmp_path / "cell.json").read_text())
+    assert rec["mesh"] == "16x16"
+    corr = rec["corrected"]
+    assert corr["flops"] > 0
+    assert corr["trip_count"] == 16                   # olmo layers
+    ma = rec["memory_analysis"]
+    # sharded decode state must fit a 16 GB v5e HBM per device
+    assert ma["argument_bytes"] < 16e9
+    assert "collectives" in rec
