@@ -1,0 +1,61 @@
+"""Benchmark section for the ``repro.search`` auto-scheduler + DSE.
+
+Rows report (a) the searched schedule vs the hand-coded Fig 8 stack on
+EdgeNeXt-S, and (b) Pareto-front summaries of a small HWSpec sweep on
+the generalization workloads (plain ViT, EfficientViT-style).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.configs.edgenext_s import CONFIG
+from repro.core.costmodel import HWSpec
+from repro.core.schedule import evaluate_stack
+from repro.core.workload import (edgenext_workload, efficientvit_workload,
+                                 vit_workload)
+from repro.search import (auto_schedule, dse, edp_best, hw_variants,
+                          pareto_front, sweep)
+
+Row = Tuple[str, float, str]
+
+# small grid keeps the benchmark run quick; the CLI exposes the full one
+_PE_SHAPES = ((8, 8), (16, 16), (32, 32))
+_SRAM_KB = (256, 512)
+
+
+def bench_search() -> List[Row]:
+    rows: List[Row] = []
+    hw = HWSpec()
+    wl = edgenext_workload(CONFIG)
+    hand = evaluate_stack(wl, hw)
+    sched = auto_schedule(wl, hw, workload="edgenext-s")
+    best_hand = hand[-1]
+    rows.append(("search.auto.edp_vs_hand",
+                 sched.cost["edp"] / best_hand.edp,
+                 "<=1: search rediscovers the full hand stack"))
+    rows.append(("search.auto.latency_ms", sched.cost["latency_s"] * 1e3,
+                 f"hand +ibn-fusion: {best_hand.latency_s*1e3:.3f}"))
+    rows.append(("search.auto.energy_mj", sched.cost["energy_j"] * 1e3,
+                 f"hand +ibn-fusion: {best_hand.energy_j*1e3:.3f}"))
+    rows.append(("search.auto.spill_edges", len(sched.edges),
+                 f"fused_nonlinear={len(sched.fused_nonlinear)}"))
+    rows.append(("search.auto.fusion_groups", len(sched.groups),
+                 f"lowered_kernels={len(sched.lowered)}"))
+
+    for name, wlx in (("vit_tiny", vit_workload()),
+                      ("efficientvit_b0", efficientvit_workload())):
+        pts = sweep(wlx, hw_variants(hw, pe_shapes=_PE_SHAPES,
+                                     sram_kb=_SRAM_KB), workload=name)
+        front = pareto_front(pts)
+        best = edp_best(pts)
+        rows.append((f"search.dse.{name}.front_size", len(front),
+                     f"of {len(pts)} variants"))
+        rows.append((f"search.dse.{name}.edp_best", best.edp,
+                     best.label))
+        # front validity: 1.0 iff no point on the front is dominated
+        valid = float(all(
+            not any(dse.dominates(q, p) for q in pts)
+            for p in front))
+        rows.append((f"search.dse.{name}.front_valid", valid,
+                     "1 = non-dominated"))
+    return rows

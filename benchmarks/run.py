@@ -1,57 +1,109 @@
-"""Benchmark aggregator: one section per paper table/figure + kernels +
-(if dry-run artifacts exist) the TPU roofline summary.
+"""Benchmark aggregator: one section per paper table/figure + the
+auto-scheduler DSE + kernels + (if dry-run artifacts exist) the TPU
+roofline summary.
 
-Prints ``name,value,derived`` CSV.  Usage:
-    PYTHONPATH=src python -m benchmarks.run
+Prints ``name,value,derived`` CSV to stdout and mirrors the same rows
+into a machine-readable ``BENCH_<sha>.json`` under ``--out-dir``
+(default: the repo root) so the perf trajectory is tracked across PRs —
+point ``--out-dir`` at the directory holding the redirected CSV to keep
+the two together.  Usage:
+    PYTHONPATH=src python -m benchmarks.run [--out-dir DIR] [--no-json]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import subprocess
 import sys
 import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
+ROOT = Path(__file__).resolve().parents[1]
 
-def main() -> None:
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "nogit"
+    except (OSError, subprocess.SubprocessError):
+        return "nogit"
+
+
+def collect_rows() -> list:
+    """All benchmark rows as (name, value, note) tuples."""
     from benchmarks.paper_figs import ALL
     from benchmarks.bench_kernels import bench_kernels
+    from benchmarks.dse import bench_search
 
-    print("name,value,derived")
-    for section, fn in ALL.items():
+    rows = []
+    sections = dict(ALL)
+    sections["search(DSE)"] = bench_search
+    for section, fn in sections.items():
         t0 = time.perf_counter()
         for name, value, note in fn():
-            print(f"{name},{value:.6g},{note}")
+            rows.append((name, value, note))
         dt = (time.perf_counter() - t0) * 1e6
-        print(f"_section.{section}.us_per_call,{dt:.0f},")
+        rows.append((f"_section.{section}.us_per_call", dt, ""))
 
     t0 = time.perf_counter()
     for name, value, note in bench_kernels():
-        print(f"{name},{value:.6g},{note}")
+        rows.append((name, value, note))
     dt = (time.perf_counter() - t0) * 1e6
-    print(f"_section.kernels.us_per_call,{dt:.0f},")
+    rows.append(("_section.kernels.us_per_call", dt, ""))
 
     # roofline summaries from dry-run artifacts (if present)
     try:
         from benchmarks import roofline
         for tag, label in (("", "baseline"), ("opt", "optimized")):
-            rows = roofline.table("pod1", tag)
-            if not rows:
+            rl = roofline.table("pod1", tag)
+            if not rl:
                 continue
-            for r in rows:
-                print(f"roofline.{label}.{r['arch']}.{r['shape']},"
-                      f"{r['roofline_fraction']:.4f},bound={r['bound']} "
-                      f"mfu={r.get('mfu_proxy', 0):.4f}")
+            for r in rl:
+                rows.append((
+                    f"roofline.{label}.{r['arch']}.{r['shape']}",
+                    r["roofline_fraction"],
+                    f"bound={r['bound']} mfu={r.get('mfu_proxy', 0):.4f}"))
             for kind in ("train_4k", "prefill_32k", "decode_32k",
                          "long_500k"):
-                sub = [r for r in rows if r["shape"] == kind]
+                sub = [x for x in rl if x["shape"] == kind]
                 if sub:
                     avg = sum(x["roofline_fraction"] for x in sub) / len(sub)
                     mfu = sum(x.get("mfu_proxy", 0) for x in sub) / len(sub)
-                    print(f"roofline.{label}.mean.{kind},{avg:.4f},"
-                          f"mfu={mfu:.4f} n={len(sub)} cells")
+                    rows.append((f"roofline.{label}.mean.{kind}", avg,
+                                 f"mfu={mfu:.4f} n={len(sub)} cells"))
     except Exception as e:                                # noqa: BLE001
-        print(f"_roofline.skipped,0,{e}")
+        rows.append(("_roofline.skipped", 0, str(e)))
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", type=Path, default=ROOT,
+                    help="where BENCH_<sha>.json is written")
+    ap.add_argument("--no-json", action="store_true",
+                    help="print the CSV only")
+    args = ap.parse_args(argv)
+
+    rows = collect_rows()
+    print("name,value,derived")
+    for name, value, note in rows:
+        print(f"{name},{value:.6g},{note}")
+
+    if not args.no_json:
+        sha = _git_sha()
+        args.out_dir.mkdir(parents=True, exist_ok=True)
+        out = args.out_dir / f"BENCH_{sha}.json"
+        out.write_text(json.dumps({
+            "sha": sha,
+            "unix_time": int(time.time()),
+            "rows": [{"name": n, "value": v, "note": note}
+                     for n, v, note in rows],
+        }, indent=1))
+        print(f"_bench.json,0,{out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

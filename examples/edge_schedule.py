@@ -6,8 +6,10 @@ validates the TPU kernel realizations against the JAX model:
   C1  fixed OX|C vs reconfigurable C|(K v FX) dataflow      (Fig 3)
   C2  pixelwise fusion of LayerNorm/Softmax                 (SIII)
   C3  inverted-bottleneck depth-first fusion                (Figs 4-5)
-  Fig 8 stack + Table I summary, then the Pallas kernels on a reduced
-  EdgeNeXt forward pass.
+  Fig 8 stack + Table I summary, then the repro.search auto-scheduler
+  (which must rediscover C1-C3 from enumeration alone) and the Pallas
+  kernels on a reduced EdgeNeXt forward pass — with the fused-IBN
+  launch parameters taken from the searched schedule.
 
     PYTHONPATH=src python examples/edge_schedule.py
 """
@@ -53,6 +55,21 @@ def main() -> None:
           f"chip power={final.chip_power_w*1e3:.1f}mW (paper 18.4), "
           f"FPS/W={final.fps_per_w_chip:.0f} (paper 731)")
 
+    # --- the auto-scheduler: C1-C3 rediscovered by search ----------------
+    from repro.search import auto_schedule
+    sched = auto_schedule(wl, hw, workload="edgenext-s")
+    print(f"\n-- repro.search auto-scheduler --")
+    print(f"  groups={len(sched.groups)} spill_edges={len(sched.edges)} "
+          f"fused_nonlinear={len(sched.fused_nonlinear)}")
+    print(f"  auto edp={sched.cost['edp']:.4g} vs hand "
+          f"+ibn-fusion edp={final.edp:.4g} "
+          f"(ratio {sched.cost['edp']/final.edp:.3f} <= 1)")
+    ibn_lowered = {k: v for k, v in sched.lowered.items()
+                   if v["kernel"] == "fused_ibn"}
+    k0 = sorted(ibn_lowered)[0]
+    print(f"  lowered fused_ibn [{k0}]: block_m={ibn_lowered[k0]['block_m']}"
+          f" block_f={ibn_lowered[k0]['block_f']}")
+
     # --- the TPU side: Pallas kernels vs the model -----------------------
     print("\n-- TPU kernels on a reduced EdgeNeXt (interpret mode) --")
     cfg = reduced_edgenext()
@@ -64,14 +81,22 @@ def main() -> None:
     print(f"  C3 depth-first IBN (XLA): max|delta| = "
           f"{float(jnp.abs(logits - logits_df).max()):.2e}")
 
+    # fused-IBN launch parameters from the searched schedule of the
+    # reduced workload (search -> lower -> real kernel)
+    from repro.core.workload import edgenext_workload as _ew
+    rsched = auto_schedule(_ew(cfg), hw, workload="edgenext-reduced")
+    rp = next(v for v in rsched.lowered.values()
+              if v["kernel"] == "fused_ibn")
     bp = pr["stages"][0]["conv_blocks"][0]
     x = jax.random.normal(jax.random.PRNGKey(2), (64, cfg.dims[0]))
     fused = ops.fused_ibn(
         jnp.concatenate([x, jnp.ones((64, 1))], -1),
         jnp.concatenate([bp["pw1_w"], bp["pw1_b"][None]], 0),
-        bp["pw2_w"], block_m=32, block_f=32) + bp["pw2_b"]
+        bp["pw2_w"], block_m=rp["block_m"],
+        block_f=rp["block_f"]) + bp["pw2_b"]
     want = edgenext._ibn_mlp(bp, x)
-    print(f"  C3 Pallas fused_ibn vs model: max|delta| = "
+    print(f"  C3 Pallas fused_ibn (searched block_m={rp['block_m']} "
+          f"block_f={rp['block_f']}) vs model: max|delta| = "
           f"{float(jnp.abs(fused - want).max()):.2e}")
 
     xi = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 16, 32))

@@ -155,9 +155,15 @@ class NetworkCost:
 # ---------------------------------------------------------------------------
 
 
-def _mac_layer_cost(layer: Layer, hw: HWSpec, mapping: str,
-                    extra_dram: int = 0) -> LayerCost:
-    cyc = dataflow.cycles(layer, mapping, hw.rows, hw.cols)
+def _mac_layer_cost(layer: Layer, hw: HWSpec, mapping,
+                    extra_dram: int = 0, *,
+                    fixed_wiring: bool = False) -> LayerCost:
+    if isinstance(mapping, str):
+        cyc = dataflow.cycles(layer, mapping, hw.rows, hw.cols)
+    else:
+        cyc = dataflow.cycles_generic(layer, mapping, hw.rows, hw.cols,
+                                      fixed_wiring=fixed_wiring)
+        mapping = "|".join(mapping).upper()        # display form
     # SRAM traffic: inputs read once (output-stationary RF holds partials
     # across the C-temporal loop), outputs written once, weights streamed.
     sram = layer.input_bytes + layer.output_bytes + layer.weight_bytes
@@ -236,4 +242,47 @@ def cost_network(
             out.append(_nonlinear_layer_cost(l, hw, fuse_nonlinear,
                                              extra_dram=spills.get(l.name,
                                                                    0)))
+    return NetworkCost(layers=out, hw=hw)
+
+
+def cost_network_scheduled(
+    layers: List[Layer],
+    hw: Optional[HWSpec] = None,
+    *,
+    mappings: Dict[str, object],
+    fused_nonlinear: "set[str]",
+    edges: List[object],
+    fixed_wiring: bool = False,
+) -> NetworkCost:
+    """Cost the network under an explicit schedule (the ``repro.search``
+    auto-scheduler's output) instead of the boolean config flags.
+
+    Decisions are fully externalized so searched and hand-coded schedules
+    are compared under identical traffic accounting:
+      mappings        : per-MAC-layer spatial mapping (legacy name or
+                        generic (row_dim, col_dim) pair)
+      fused_nonlinear : names of non-MAC layers folded into their
+                        producer (zero cycles / zero extra traffic — C2)
+      edges           : fusion.SpillEdge list — tensors that round-trip
+                        DRAM at group boundaries
+      fixed_wiring    : the array's columns are a hard-wired adder tree
+                        (non-reconfigurable baseline) — generic mappings
+                        are costed with the column-void penalty
+    """
+    hw = hw or HWSpec()
+    from repro.core.fusion import spill_bytes_per_layer
+    spills = spill_bytes_per_layer(layers, edges)
+    out: List[LayerCost] = []
+    for l in layers:
+        if l.op in MAC_OPS:
+            mapping = mappings.get(l.name)
+            if mapping is None:
+                mapping = dataflow.select_mapping(l, reconfigurable=False)
+            out.append(_mac_layer_cost(l, hw, mapping,
+                                       extra_dram=spills.get(l.name, 0),
+                                       fixed_wiring=fixed_wiring))
+        else:
+            out.append(_nonlinear_layer_cost(
+                l, hw, l.name in fused_nonlinear,
+                extra_dram=spills.get(l.name, 0)))
     return NetworkCost(layers=out, hw=hw)

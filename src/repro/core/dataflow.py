@@ -18,47 +18,91 @@ bus-streaming stalls unless fused by C2 (see costmodel.LayerCost).
 from __future__ import annotations
 
 import math
-from typing import Literal
+from typing import Dict, Literal, Tuple, Union
 
 from repro.core.workload import (ACT, CONV, DWCONV, ELEMWISE, MAC_OPS,
                                  MATMUL, NORM, PWCONV, SOFTMAX, Layer)
 
 Mapping = Literal["OXC", "CK", "CFX"]
+# generalized spatial mapping: (row_dim, col_dim) — any ordered pair of
+# loop dims unrolled over the rows x cols PE array
+GenericMapping = Tuple[str, str]
+AnyMapping = Union[Mapping, GenericMapping]
+
+SPATIAL_DIMS = ("b", "k", "c", "ox", "oy", "fx", "fy")
+
+# legacy mapping -> (generic dim pair, fixed column wiring).  The fixed
+# single-dataflow baseline (OX|C) hard-wires the columns as an adder
+# tree; the reconfigurable array can wire either axis either way.
+LEGACY_MAPPINGS: Dict[str, Tuple[GenericMapping, bool]] = {
+    "OXC": (("ox", "c"), True),
+    "CK": (("c", "k"), False),
+    "CFX": (("c", "fx"), False),
+}
 
 
 def _ceil(a: int, b: int) -> int:
     return -(-a // b)
 
 
-def cycles(layer: Layer, mapping: Mapping, rows: int = 16,
-           cols: int = 16) -> int:
-    """Temporal steps to execute ``layer`` under ``mapping`` on a
-    rows x cols PE array (MACs only; returns 0 for non-MAC ops)."""
+def dim_sizes(layer: Layer) -> Dict[str, int]:
+    """Loop-dim extents of a layer.  Depthwise: K=1 per group (the C dim
+    counts groups, which act as independent outputs)."""
+    return {"b": layer.b, "k": 1 if layer.op == DWCONV else layer.k,
+            "c": layer.c, "ox": layer.ox, "oy": layer.oy,
+            "fx": layer.fx, "fy": layer.fy}
+
+
+def reduction_dims(layer: Layer) -> Tuple[str, ...]:
+    """Dims whose spatial unrolling needs an accumulation path (adder
+    tree / neighbor propagation).  Depthwise: C indexes groups, not a
+    reduction — only the kernel window reduces."""
+    return ("fx", "fy") if layer.op == DWCONV else ("c", "fx", "fy")
+
+
+def cycles_generic(layer: Layer, mapping: GenericMapping, rows: int = 16,
+                   cols: int = 16, *, fixed_wiring: bool = False) -> int:
+    """Temporal steps for ``layer`` with ``mapping[0]`` unrolled over the
+    ``rows`` axis and ``mapping[1]`` over the ``cols`` axis; every other
+    loop dim runs temporally (ceil-division models the spatial losses of
+    Fig 3).
+
+    ``fixed_wiring`` models the non-reconfigurable baseline array whose
+    column axis is a hard-wired adder tree: unrolling a non-reduction dim
+    there is void (one element per tree contributes; the dim runs
+    temporally) — this is exactly why the fixed OX|C design collapses to
+    1/cols utilization on depthwise layers.
+    """
     if layer.op not in MAC_OPS:
         return 0
-    b, k, c = layer.b, layer.k, layer.c
-    ox, oy, fx, fy = layer.ox, layer.oy, layer.fx, layer.fy
+    rd, cd = mapping
+    sizes = dim_sizes(layer)
+    if rd == cd or rd not in sizes or cd not in sizes:
+        raise ValueError(f"bad mapping {mapping}")
+    col_void = fixed_wiring and cd not in reduction_dims(layer)
+    total = 1
+    for d, s in sizes.items():
+        if d == rd:
+            total *= _ceil(s, rows)
+        elif d == cd and not col_void:
+            total *= _ceil(s, cols)
+        else:
+            total *= s
+    return total
 
-    if layer.op == DWCONV:
-        # per-group K=1 and reduction limited to the FXxFY window
-        if mapping == "OXC":
-            # OX spatial (rows), C-reduction spatial (cols) -> only one
-            # input channel contributes per group: cols utilization = 1
-            return b * c * oy * fx * fy * _ceil(ox, rows)
-        if mapping == "CK":
-            # C spatial over groups, K spatial idle (K=1 per group)
-            return b * oy * ox * fx * fy * _ceil(c, rows)
-        # CFX: groups across rows, kernel taps across cols, outputs
-        # propagate along rows accumulating over fx
-        return b * oy * ox * fy * _ceil(c, rows) * _ceil(fx, cols)
 
-    # dense conv / pointwise / matmul: full KxC MAC space available
-    if mapping == "OXC":
-        return b * k * fx * fy * oy * _ceil(ox, rows) * _ceil(c, cols)
-    if mapping == "CK":
-        return b * ox * oy * fx * fy * _ceil(c, rows) * _ceil(k, cols)
-    # CFX for a dense layer: K runs temporally — rarely sensible
-    return b * k * oy * ox * fy * _ceil(c, rows) * _ceil(fx, cols)
+def cycles(layer: Layer, mapping: AnyMapping, rows: int = 16,
+           cols: int = 16) -> int:
+    """Temporal steps to execute ``layer`` under ``mapping`` on a
+    rows x cols PE array (MACs only; returns 0 for non-MAC ops).
+
+    ``mapping`` is a legacy name ("OXC" | "CK" | "CFX") or a generic
+    (row_dim, col_dim) pair — see ``cycles_generic``.
+    """
+    if isinstance(mapping, str):
+        pair, fixed = LEGACY_MAPPINGS[mapping]
+        return cycles_generic(layer, pair, rows, cols, fixed_wiring=fixed)
+    return cycles_generic(layer, mapping, rows, cols)
 
 
 def select_mapping(layer: Layer, *, reconfigurable: bool) -> Mapping:
@@ -72,7 +116,7 @@ def select_mapping(layer: Layer, *, reconfigurable: bool) -> Mapping:
     return "CFX" if layer.op == DWCONV else "CK"
 
 
-def spatial_utilization(layer: Layer, mapping: Mapping, rows: int = 16,
+def spatial_utilization(layer: Layer, mapping: AnyMapping, rows: int = 16,
                         cols: int = 16) -> float:
     cyc = cycles(layer, mapping, rows, cols)
     if cyc == 0:

@@ -115,9 +115,14 @@ class FusedTile:
 def optimize_tile(expand: Layer, project: Layer, *, local_buffer: int,
                   candidates_x: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64,
                                                    128, 256),
-                  ) -> FusedTile:
+                  full_width: bool = False) -> FusedTile:
     """Pick (tile_x, tile_c) minimizing SRAM traffic subject to the tile of
     T fitting in the local buffer (paper: 'tile sizes optimized by ZigZag').
+
+    ``full_width=True`` additionally requires the whole channel extent of
+    T resident per x-slab (needed when a channel-stat nonlinear sits
+    between the fused layers).  ``repro.search.tiler`` supplies
+    budget-driven ``candidates_x`` in place of this default fixed list.
 
     Traffic model for one IBN:
       x       : re-read once per c-tile round (streams past the array)
@@ -134,7 +139,11 @@ def optimize_tile(expand: Layer, project: Layer, *, local_buffer: int,
     best: Optional[FusedTile] = None
     for tx in candidates_x:
         tx = min(tx, n)
-        tc = min(c_mid, max(1, local_buffer // max(1, tx * bits)))
+        tc = min(c_mid, local_buffer // max(1, tx * bits))
+        if tc < 1 or tx * tc * bits > local_buffer:
+            continue        # tile of T cannot fit the local buffer
+        if full_width and tc < c_mid:
+            continue        # stats need the whole channel extent resident
         n_xt = -(-n // tx)
         n_ct = -(-c_mid // tc)
         x_reads = n * c_in * bits * n_ct
@@ -145,5 +154,8 @@ def optimize_tile(expand: Layer, project: Layer, *, local_buffer: int,
                          weight_rereads=n_xt, sram_traffic=traffic)
         if best is None or cand.sram_traffic < best.sram_traffic:
             best = cand
-    assert best is not None
+    if best is None:
+        raise ValueError(
+            f"no feasible IBN tile: local_buffer={local_buffer}B cannot "
+            f"hold even a 1x1 tile of T ({bits}B/elem)")
     return best

@@ -3,6 +3,12 @@
 Evaluates the four accumulating configurations of Fig 8 on a workload and
 reports latency / energy / EDP (normalized to the baseline), plus the
 Fig 3 / Fig 5 / Table I quantities the benchmarks print.
+
+Beyond the four hand-coded configs, ``include_auto=True`` appends the
+``repro.search`` auto-scheduler's result ("auto" row): every decision
+the fixed stack wires in (dual dataflow, pixelwise fusion, IBN fusion)
+is instead *searched* over mappings / loop orders / fusion partitions,
+and costed under the identical accounting so the rows are comparable.
 """
 from __future__ import annotations
 
@@ -43,17 +49,33 @@ class StackResult:
         return self.cost.edp
 
 
-def evaluate_stack(layers: List[Layer], hw: Optional[HWSpec] = None
-                   ) -> List[StackResult]:
+AUTO_CONFIG = "auto"
+
+
+def auto_result(layers: List[Layer], hw: Optional[HWSpec] = None
+                ) -> StackResult:
+    """The searched schedule as a stack row (lazy import: core stays
+    importable without the search subsystem)."""
+    from repro.search import auto_schedule, evaluate_schedule
     hw = hw or HWSpec()
-    return [StackResult(name, cost_network(layers, hw, **kw))
-            for name, kw in CONFIG_STACK]
+    sched = auto_schedule(layers, hw)
+    return StackResult(AUTO_CONFIG, evaluate_schedule(layers, sched, hw))
 
 
-def normalized_stack(layers: List[Layer], hw: Optional[HWSpec] = None
-                     ) -> List[Dict[str, float]]:
+def evaluate_stack(layers: List[Layer], hw: Optional[HWSpec] = None, *,
+                   include_auto: bool = False) -> List[StackResult]:
+    hw = hw or HWSpec()
+    out = [StackResult(name, cost_network(layers, hw, **kw))
+           for name, kw in CONFIG_STACK]
+    if include_auto:
+        out.append(auto_result(layers, hw))
+    return out
+
+
+def normalized_stack(layers: List[Layer], hw: Optional[HWSpec] = None, *,
+                     include_auto: bool = False) -> List[Dict[str, float]]:
     """Fig 8: latency/energy/EDP of each config normalized to baseline."""
-    res = evaluate_stack(layers, hw)
+    res = evaluate_stack(layers, hw, include_auto=include_auto)
     base = res[0]
     return [{
         "config": r.name,

@@ -177,6 +177,118 @@ def edgenext_workload(cfg: EdgeNeXtConfig, batch: int = 1) -> List[Layer]:
     return layers
 
 
+# ---------------------------------------------------------------------------
+# Additional workloads (auto-scheduler generalization targets)
+# ---------------------------------------------------------------------------
+
+
+def vit_workload(*, img_size: int = 224, patch: int = 16, dim: int = 192,
+                 depth: int = 12, heads: int = 3, mlp_ratio: int = 4,
+                 num_classes: int = 1000, batch: int = 1) -> List[Layer]:
+    """A plain ViT (defaults: ViT-Tiny/16) as a loop-dim layer chain.
+
+    Standard softmax attention (scores are [N, N] per head — token-dim
+    reduction, unlike XCA's channel-dim) followed by the MLP inverted
+    bottleneck.  Exercises the scheduler on a workload with no
+    convolutions after the patch embedding.
+    """
+    layers: List[Layer] = []
+    n = (img_size // patch) ** 2
+    dh = dim // heads
+    layers.append(Layer("patch_embed", CONV, b=batch, k=dim, c=3,
+                        ox=img_size // patch, oy=img_size // patch,
+                        fx=patch, fy=patch))
+    for bi in range(depth):
+        p = f"blk{bi}"
+        layers.append(Layer(f"{p}.ln1", NORM, b=batch, c=dim, ox=n))
+        layers.append(Layer(f"{p}.qkv", PWCONV, b=batch, k=3 * dim, c=dim,
+                            ox=n))
+        # scores [N, N] = q [N, dh] @ k^T [dh, N] per head
+        layers.append(Layer(f"{p}.qk", MATMUL, b=batch * heads, k=n, c=dh,
+                            ox=n))
+        layers.append(Layer(f"{p}.sm", SOFTMAX, b=batch * heads, c=n, ox=n))
+        # out [N, dh] = probs [N, N] @ v [N, dh]
+        layers.append(Layer(f"{p}.av", MATMUL, b=batch * heads, k=dh, c=n,
+                            ox=n))
+        layers.append(Layer(f"{p}.proj", PWCONV, b=batch, k=dim, c=dim,
+                            ox=n))
+        layers.append(Layer(f"{p}.res1", ELEMWISE, b=batch, c=dim, ox=n))
+        layers.append(Layer(f"{p}.ln2", NORM, b=batch, c=dim, ox=n))
+        layers.append(Layer(f"{p}.fc1", PWCONV, b=batch, k=mlp_ratio * dim,
+                            c=dim, ox=n, ibn_role="expand", ibn_id=1000 + bi))
+        layers.append(Layer(f"{p}.act", ACT, b=batch, c=mlp_ratio * dim,
+                            ox=n, ibn_role="act", ibn_id=1000 + bi))
+        layers.append(Layer(f"{p}.fc2", PWCONV, b=batch, k=dim,
+                            c=mlp_ratio * dim, ox=n, ibn_role="project",
+                            ibn_id=1000 + bi))
+        layers.append(Layer(f"{p}.res2", ELEMWISE, b=batch, c=dim, ox=n))
+    layers.append(Layer("head.ln", NORM, b=batch, c=dim))
+    layers.append(Layer("head.fc", PWCONV, b=batch, k=num_classes, c=dim))
+    return layers
+
+
+def efficientvit_workload(*, img_size: int = 224,
+                          widths: Tuple[int, ...] = (16, 32, 64, 128),
+                          depths: Tuple[int, ...] = (1, 2, 2, 2),
+                          attn_stages: Tuple[int, ...] = (2, 3),
+                          heads: int = 4, expand: int = 4,
+                          num_classes: int = 1000,
+                          batch: int = 1) -> List[Layer]:
+    """An EfficientViT-style hybrid (arXiv 2403.20230's target family):
+    MBConv stages (depthwise + pointwise inverted bottlenecks) with
+    ReLU-linear-attention blocks in the late stages.  Linear attention
+    contracts [dh, dh] = k^T v first, so its matmuls are tiny-output /
+    long-reduction — a mapping regime the EdgeNeXt trio never sees.
+    """
+    layers: List[Layer] = []
+    res = img_size // 2
+    layers.append(Layer("stem", CONV, b=batch, k=widths[0], c=3, ox=res,
+                        oy=res, fx=3, fy=3))
+    ibn_id = [2000]
+    for si, (w, d) in enumerate(zip(widths, depths)):
+        if si > 0:
+            res //= 2
+            layers.append(Layer(f"s{si}.down", CONV, b=batch, k=w,
+                                c=widths[si - 1], ox=res, oy=res, fx=2,
+                                fy=2))
+        n = res * res
+        for bi in range(d):
+            p = f"s{si}.mb{bi}"
+            i = ibn_id[0]
+            ibn_id[0] += 1
+            layers.append(Layer(f"{p}.dw", DWCONV, b=batch, c=w, ox=res,
+                                oy=res, fx=3, fy=3))
+            layers.append(Layer(f"{p}.ln", NORM, b=batch, c=w, ox=res,
+                                oy=res))
+            layers.append(Layer(f"{p}.pw1", PWCONV, b=batch, k=expand * w,
+                                c=w, ox=n, ibn_role="expand", ibn_id=i))
+            layers.append(Layer(f"{p}.act", ACT, b=batch, c=expand * w,
+                                ox=n, ibn_role="act", ibn_id=i))
+            layers.append(Layer(f"{p}.pw2", PWCONV, b=batch, k=w,
+                                c=expand * w, ox=n, ibn_role="project",
+                                ibn_id=i))
+            layers.append(Layer(f"{p}.res", ELEMWISE, b=batch, c=w, ox=res,
+                                oy=res))
+        if si in attn_stages:
+            p = f"s{si}.attn"
+            dh = max(1, w // heads)
+            layers.append(Layer(f"{p}.qkv", PWCONV, b=batch, k=3 * w, c=w,
+                                ox=n))
+            # linear attention: kv [dh, dh] = k^T [dh, N] @ v [N, dh]
+            layers.append(Layer(f"{p}.kv", MATMUL, b=batch * heads, k=dh,
+                                c=n, ox=dh))
+            # q @ kv: [N, dh]
+            layers.append(Layer(f"{p}.qkv_mul", MATMUL, b=batch * heads,
+                                k=dh, c=dh, ox=n))
+            layers.append(Layer(f"{p}.proj", PWCONV, b=batch, k=w, c=w,
+                                ox=n))
+            layers.append(Layer(f"{p}.res", ELEMWISE, b=batch, c=w, ox=n))
+    layers.append(Layer("head.ln", NORM, b=batch, c=widths[-1]))
+    layers.append(Layer("head.fc", PWCONV, b=batch, k=num_classes,
+                        c=widths[-1]))
+    return layers
+
+
 def total_macs(layers: List[Layer]) -> int:
     return sum(l.macs for l in layers)
 

@@ -130,6 +130,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     }
     try:
         ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):      # older jax: one dict/device
+            ca = ca[0] if ca else {}
         record["cost_analysis"] = {
             k: v for k, v in ca.items()
             if isinstance(v, (int, float)) and (

@@ -204,9 +204,9 @@ def moe_apply_sharded(cfg: ModelConfig, params: Params, x: jax.Array, *,
             call_args.append(a)
             call_specs.append(s)
 
-    out, aux = jax.shard_map(
+    from repro.runtime.sharding import shard_map
+    out, aux = shard_map(
         wrapped, mesh=mesh,
         in_specs=tuple(call_specs),
-        out_specs=(tok_spec, P()),
-        check_vma=False)(*call_args)
+        out_specs=(tok_spec, P()))(*call_args)
     return out.reshape(orig_shape), aux

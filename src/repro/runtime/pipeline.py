@@ -94,11 +94,11 @@ def gpipe(
             jnp.where(s == last, out, jnp.zeros_like(out)), axis)
         return out
 
-    return jax.shard_map(
+    from repro.runtime.sharding import shard_map
+    return shard_map(
         stage_prog, mesh=mesh,
         in_specs=(p_specs, x_spec),
-        out_specs=o_spec,
-        check_vma=False)(stage_params, x_micro)
+        out_specs=o_spec)(stage_params, x_micro)
 
 
 def microbatch(x: jax.Array, n_micro: int) -> jax.Array:

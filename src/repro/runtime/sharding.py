@@ -23,6 +23,22 @@ from repro.models import params as param_lib
 Pytree = Any
 
 
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs):
+    """Version-portable shard_map.
+
+    jax >= 0.6 exposes ``jax.shard_map`` (replication checking flag
+    ``check_vma``); 0.4.x only has ``jax.experimental.shard_map`` with
+    ``check_rep``.  Both checks are disabled — the callers do their own
+    psum bookkeeping the checker cannot follow.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

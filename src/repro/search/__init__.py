@@ -1,0 +1,49 @@
+"""repro.search — ZigZag-style auto-scheduler for the edge accelerator.
+
+Replaces the hand-coded heuristics (the fixed ``CONFIG_STACK``, the
+OXC/CK/CFX mapping trio, the 9-candidate tile list) with design-space
+exploration:
+
+  mapper     spatial mappings + temporal loop orders per layer
+  partition  DP fusion partitioner over the layer chain
+  tiler      budget-driven tile search for depth-first groups
+  dse        Pareto sweep over HWSpec variants
+  lower      schedule -> concrete Pallas kernel launch parameters
+  cache      JSON schedule artifacts + content-addressed cache
+  auto       the orchestrator (``auto_schedule``)
+
+CLI: ``PYTHONPATH=src python -m repro.search --workload edgenext-s``.
+"""
+from repro.search.auto import Schedule, auto_schedule, evaluate_schedule
+from repro.search.cache import (cached_search, load_schedule, save_schedule,
+                                schedule_key)
+from repro.search.dse import (DsePoint, edp_best, hw_variants, pareto_front,
+                              sweep)
+
+__all__ = [
+    "Schedule", "auto_schedule", "evaluate_schedule", "cached_search",
+    "load_schedule", "save_schedule", "schedule_key", "DsePoint",
+    "edp_best", "hw_variants", "pareto_front", "sweep", "WORKLOADS",
+    "get_workload",
+]
+
+
+def get_workload(name: str):
+    """Named workload registry for the CLI / benchmarks."""
+    from repro.configs.edgenext_s import CONFIG, reduced_edgenext
+    from repro.core.workload import (edgenext_workload,
+                                     efficientvit_workload, vit_workload)
+    builders = {
+        "edgenext-s": lambda: edgenext_workload(CONFIG),
+        "edgenext-reduced": lambda: edgenext_workload(reduced_edgenext()),
+        "vit-tiny": lambda: vit_workload(),
+        "efficientvit-b0": lambda: efficientvit_workload(),
+    }
+    if name not in builders:
+        raise KeyError(f"unknown workload {name!r}; "
+                       f"choose from {sorted(builders)}")
+    return builders[name]()
+
+
+WORKLOADS = ("edgenext-s", "edgenext-reduced", "vit-tiny",
+             "efficientvit-b0")

@@ -1,0 +1,102 @@
+"""CLI: run the auto-scheduler / DSE and write JSON schedule artifacts.
+
+    PYTHONPATH=src python -m repro.search --workload edgenext-s \
+        --out schedule.json
+    PYTHONPATH=src python -m repro.search --workload vit-tiny --dse
+
+Exit code 0 on success; the schedule artifact is reusable through
+``repro.search.cache`` (content-addressed by workload + HWSpec).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+from repro.core.costmodel import HWSpec
+from repro.core.schedule import CONFIG_STACK, evaluate_stack
+from repro.search import (WORKLOADS, auto_schedule, cached_search, dse,
+                          get_workload, save_schedule)
+
+
+def _build_hw(args: argparse.Namespace) -> HWSpec:
+    over = {}
+    for f in ("rows", "cols"):
+        v = getattr(args, f)
+        if v is not None:
+            over[f] = v
+    if args.sram_kb is not None:
+        over["sram_bytes"] = args.sram_kb * 1024
+        over["act_budget_bytes"] = int(args.sram_kb * 1024 * 3 / 8)
+    if args.rf_kb is not None:
+        over["output_rf_bytes"] = args.rf_kb * 1024
+    return dataclasses.replace(HWSpec(), **over)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.search", description=__doc__)
+    ap.add_argument("--workload", default="edgenext-s", choices=WORKLOADS)
+    ap.add_argument("--out", type=Path, default=None,
+                    help="write the schedule artifact here")
+    ap.add_argument("--cache-dir", type=Path, default=None,
+                    help="content-addressed schedule cache directory")
+    ap.add_argument("--dse", action="store_true",
+                    help="sweep HWSpec variants and print the Pareto front")
+    ap.add_argument("--rows", type=int, default=None)
+    ap.add_argument("--cols", type=int, default=None)
+    ap.add_argument("--sram-kb", type=int, default=None)
+    ap.add_argument("--rf-kb", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    layers = get_workload(args.workload)
+    hw = _build_hw(args)
+
+    if args.dse:
+        pts = dse.sweep(layers, dse.hw_variants(hw),
+                        workload=args.workload)
+        front = dse.pareto_front(pts)
+        best = dse.edp_best(pts)
+        print(f"# DSE {args.workload}: {len(pts)} variants, "
+              f"{len(front)} on the Pareto front")
+        print("variant,latency_ms,energy_mj,edp,on_front")
+        on_front = {p.label for p in front}
+        for p in sorted(pts, key=lambda p: p.edp):
+            print(f"{p.label},{p.latency_s*1e3:.4g},{p.energy_j*1e3:.4g},"
+                  f"{p.edp:.4g},{int(p.label in on_front)}")
+        print(f"# EDP-best: {best.label} (edp={best.edp:.4g})")
+        if args.out:
+            args.out.write_text(json.dumps({
+                "workload": args.workload,
+                "front": [{**{k: getattr(p, k) for k in
+                              ("rows", "cols", "sram_kb", "rf_kb",
+                               "latency_s", "energy_j", "edp")}}
+                          for p in front],
+                "edp_best": best.label}, indent=1))
+            print(f"# wrote {args.out}")
+        return 0
+
+    if args.cache_dir:
+        sched = cached_search(layers, hw, workload=args.workload,
+                              cache_dir=args.cache_dir)
+    else:
+        sched = auto_schedule(layers, hw, workload=args.workload)
+
+    print(f"# auto-schedule {args.workload} on {hw.rows}x{hw.cols} PEs")
+    print(f"groups={len(sched.groups)} spill_edges={len(sched.edges)} "
+          f"fused_nonlinear={len(sched.fused_nonlinear)} "
+          f"lowered_kernels={len(sched.lowered)}")
+    for k, v in sched.cost.items():
+        print(f"cost.{k},{v:.6g}")
+    names = [n for n, _ in CONFIG_STACK]
+    for r, name in zip(evaluate_stack(layers, hw), names):
+        print(f"hand.{name}.edp,{r.edp:.6g}")
+    if args.out:
+        save_schedule(sched, args.out)
+        print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

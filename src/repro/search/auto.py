@@ -1,0 +1,162 @@
+"""The auto-scheduler: mapping + loop order + fusion + tiles, end to end.
+
+``auto_schedule`` derives a full per-layer schedule from enumeration
+alone — no IBN annotations, no reconfigurable/fusion flags:
+
+  1. spatial mapping per MAC layer   (mapper: ~42-point space/layer)
+  2. fusion partition over the chain (partition: DP over groups)
+  3. tiles per depth-first group     (tiler: budget-driven)
+  4. temporal loop order per layer   (mapper: pixelwise-constrained
+     where a channel-stat nonlinear fused into the layer's writeback)
+  5. Pallas launch parameters        (lower)
+  6. headline cost via ``costmodel.cost_network_scheduled`` — the same
+     traffic accounting the hand-coded Fig 8 stack uses, so searched
+     and hand-coded schedules are directly comparable.
+
+The result is a JSON-serializable ``Schedule`` (see ``cache``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.costmodel import (HWSpec, NetworkCost,
+                                  cost_network_scheduled)
+from repro.core.workload import MAC_OPS, NORM, SOFTMAX, Layer
+from repro.search import cache as cache_mod
+from repro.search import lower as lower_mod
+from repro.search import mapper, partition, tiler
+
+
+@dataclasses.dataclass
+class Schedule:
+    """A complete searched schedule (JSON-serializable)."""
+    version: int
+    workload: str
+    key: str                                       # content hash
+    hw: Dict[str, float]
+    mappings: Dict[str, Tuple[str, str]]           # MAC layer -> (row, col)
+    orders: Dict[str, Tuple[str, ...]]             # MAC layer -> loop order
+    fused_nonlinear: Tuple[str, ...]
+    groups: Tuple[Tuple[str, ...], ...]            # layer names per group
+    edges: Tuple[Tuple[int, int, int], ...]        # (producer, consumer, B)
+    tiles: Dict[str, Dict[str, int]]               # group head -> tile
+    lowered: Dict[str, Dict]                       # kernel -> params
+    cost: Dict[str, float]
+    # columns hard-wired as an adder tree (non-reconfigurable array):
+    # the mappings must be costed with the column-void penalty
+    fixed_wiring: bool = False
+
+    def spill_edge_list(self):
+        from repro.core.fusion import SpillEdge
+        return [SpillEdge(producer=p, consumer=c, nbytes=b, is_ibn=False)
+                for p, c, b in self.edges]
+
+
+def evaluate_schedule(layers: List[Layer], schedule: Schedule,
+                      hw: Optional[HWSpec] = None) -> NetworkCost:
+    """Cost a Schedule with the shared zigzag-lite accounting."""
+    hw = hw or HWSpec()
+    return cost_network_scheduled(
+        layers, hw,
+        mappings={k: tuple(v) for k, v in schedule.mappings.items()},
+        fused_nonlinear=set(schedule.fused_nonlinear),
+        edges=schedule.spill_edge_list(),
+        fixed_wiring=schedule.fixed_wiring)
+
+
+def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
+                  workload: str = "custom",
+                  reconfigurable: bool = True) -> Schedule:
+    """Search mappings, loop orders, fusion groups, and tiles for one
+    workload on one HWSpec.  ``reconfigurable=False`` restricts the
+    whole network to a single fixed-wiring mapping (the paper's baseline
+    array) — the search then optimizes only what that array allows."""
+    hw = hw or HWSpec()
+
+    # 1. spatial mappings
+    mappings: Dict[str, Tuple[str, str]] = {}
+    cycles_by_name: Dict[str, int] = {}
+    fixed = None if reconfigurable else \
+        mapper.best_fixed_mapping(layers, hw.rows, hw.cols)
+    for l in layers:
+        if l.op not in MAC_OPS:
+            continue
+        if fixed is not None:
+            from repro.core import dataflow
+            mappings[l.name] = fixed
+            cycles_by_name[l.name] = dataflow.cycles_generic(
+                l, fixed, hw.rows, hw.cols, fixed_wiring=True)
+        else:
+            mc = mapper.best_mapping(l, hw.rows, hw.cols)
+            mappings[l.name] = mc.mapping
+            cycles_by_name[l.name] = mc.cycles
+
+    # 2. fusion partition (DP)
+    part = partition.partition_chain(layers, cycles_by_name, hw)
+
+    # 3. tiles + group summaries
+    tiles: Dict[str, Dict[str, int]] = {}
+    group_names: List[Tuple[str, ...]] = []
+    for g in part.groups:
+        sl = layers[g.start:g.end]
+        group_names.append(tuple(l.name for l in sl))
+        macs = [l for l in sl if l.op in MAC_OPS]
+        if g.tile is not None and macs:
+            tiles[macs[0].name] = {
+                "tile_x": g.tile.tile_x, "tile_c": g.tile.tile_c,
+                "buffer_bytes": g.tile.buffer_bytes,
+                "weight_rereads": g.tile.weight_rereads,
+                "sram_traffic": g.tile.sram_traffic}
+
+    # 4. temporal orders (pixelwise-constrained where a channel-stat
+    #    nonlinear fused into this layer's writeback)
+    orders: Dict[str, Tuple[str, ...]] = {}
+    fused_set = set(part.fused_nonlinear)
+    for g in part.groups:
+        sl = layers[g.start:g.end]
+        last_mac: Optional[Layer] = None
+        needs_pixelwise: Dict[str, bool] = {}
+        for l in sl:
+            if l.op in MAC_OPS:
+                last_mac = l
+                needs_pixelwise.setdefault(l.name, False)
+            elif (l.op in (NORM, SOFTMAX) and l.name in fused_set
+                  and last_mac is not None):
+                needs_pixelwise[last_mac.name] = True
+        for l in sl:
+            if l.op not in MAC_OPS:
+                continue
+            t = mapper.best_temporal(
+                l, hw, require_pixelwise=needs_pixelwise.get(l.name, False))
+            if t is None:
+                t = mapper.best_temporal(l, hw)
+            if t is not None:
+                orders[l.name] = t.order
+
+    # 5. Pallas launch parameters
+    lowered = {
+        " + ".join(lk.layer_names): {"kernel": lk.kernel, **lk.params}
+        for lk in lower_mod.lower_schedule(
+            list(layers), part.groups, tiles,
+            local_buffer=hw.output_rf_bytes)}
+
+    sched = Schedule(
+        version=cache_mod.SEARCH_VERSION, workload=workload,
+        key=cache_mod.schedule_key(layers, hw),
+        hw={f.name: getattr(hw, f.name)
+            for f in dataclasses.fields(hw)},
+        mappings=mappings, orders=orders,
+        fused_nonlinear=tuple(part.fused_nonlinear),
+        groups=tuple(group_names),
+        edges=tuple((e.producer, e.consumer, e.nbytes)
+                    for e in part.edges),
+        tiles=tiles, lowered=lowered, cost={},
+        fixed_wiring=not reconfigurable)
+
+    # 6. headline numbers under the shared accounting
+    nc = evaluate_schedule(layers, sched, hw)
+    sched.cost = {"latency_s": nc.latency_s, "energy_j": nc.energy_j,
+                  "edp": nc.edp, "fps": nc.fps,
+                  "dram_bytes": float(nc.dram_bytes())}
+    return sched

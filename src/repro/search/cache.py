@@ -1,0 +1,89 @@
+"""JSON schedule artifacts + content-addressed search cache.
+
+A schedule is a pure function of (workload layer list, HWSpec, search
+version); ``schedule_key`` hashes that triple so repeated CLI /
+benchmark invocations reuse the artifact instead of re-running the DP.
+Artifacts are plain JSON (one file per schedule) so they can be diffed,
+committed, or consumed by external tooling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import List, Optional
+
+from repro.core.costmodel import HWSpec
+from repro.core.workload import Layer
+
+# bump when the search space / cost accounting changes so stale cached
+# schedules are never replayed against a newer engine
+SEARCH_VERSION = 1
+
+
+def _canon_layers(layers: List[Layer]) -> List[dict]:
+    return [dataclasses.asdict(l) for l in layers]
+
+
+def schedule_key(layers: List[Layer], hw: HWSpec) -> str:
+    """Content hash identifying one search problem."""
+    blob = json.dumps(
+        {"v": SEARCH_VERSION, "hw": dataclasses.asdict(hw),
+         "layers": _canon_layers(layers)},
+        sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def save_schedule(schedule, path: Path) -> Path:
+    """Write a Schedule (dataclass) as a JSON artifact."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(dataclasses.asdict(schedule), indent=1,
+                               sort_keys=True))
+    return path
+
+
+def load_schedule(path: Path) -> Optional["object"]:
+    """Load a schedule artifact back.  Returns a Schedule, or None if the
+    file is unreadable / from a different search version."""
+    from repro.search.auto import Schedule
+    try:
+        raw = json.loads(Path(path).read_text())
+    except (OSError, ValueError):
+        return None
+    if raw.get("version") != SEARCH_VERSION:
+        return None
+    try:
+        return Schedule(
+            version=raw["version"], workload=raw["workload"],
+            key=raw["key"], hw=raw["hw"],
+            mappings={k: tuple(v) for k, v in raw["mappings"].items()},
+            orders={k: tuple(v) for k, v in raw["orders"].items()},
+            fused_nonlinear=tuple(raw["fused_nonlinear"]),
+            groups=tuple(tuple(g) for g in raw["groups"]),
+            edges=tuple(tuple(e) for e in raw["edges"]),
+            tiles=raw["tiles"], lowered=raw["lowered"], cost=raw["cost"],
+            fixed_wiring=raw.get("fixed_wiring", False))
+    except (KeyError, TypeError):
+        return None
+
+
+def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
+                  workload: str = "custom",
+                  cache_dir: Optional[Path] = None,
+                  refresh: bool = False):
+    """Run (or replay) the auto-scheduler through the artifact cache."""
+    from repro.search.auto import auto_schedule
+    hw = hw or HWSpec()
+    if cache_dir is None:
+        return auto_schedule(layers, hw, workload=workload)
+    key = schedule_key(layers, hw)
+    path = Path(cache_dir) / f"{workload}-{key}.json"
+    if not refresh and path.exists():
+        sched = load_schedule(path)
+        if sched is not None and sched.key == key:
+            return sched
+    sched = auto_schedule(layers, hw, workload=workload)
+    save_schedule(sched, path)
+    return sched

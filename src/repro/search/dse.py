@@ -1,0 +1,101 @@
+"""Hardware design-space exploration: Pareto sweep over HWSpec variants.
+
+For each candidate accelerator (PE array shape, SRAM / RF sizing) the
+full auto-scheduler runs and reports the workload's latency / energy /
+EDP — so every point on the front carries its *own* best schedule, not
+a schedule tuned for one reference design (the co-search ZigZag itself
+performs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.costmodel import HWSpec
+from repro.core.workload import Layer
+from repro.search.auto import Schedule, auto_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class DsePoint:
+    rows: int
+    cols: int
+    sram_kb: int
+    rf_kb: int
+    latency_s: float
+    energy_j: float
+    edp: float
+    schedule: Schedule
+
+    @property
+    def label(self) -> str:
+        return (f"{self.rows}x{self.cols}pe-{self.sram_kb}kSRAM-"
+                f"{self.rf_kb}kRF")
+
+
+def hw_variants(base: Optional[HWSpec] = None, *,
+                pe_shapes: Sequence[Tuple[int, int]] = (
+                    (8, 8), (8, 16), (16, 16), (16, 32), (32, 32)),
+                sram_kb: Sequence[int] = (256, 512, 1024),
+                rf_kb: Sequence[int] = (24,)) -> List[HWSpec]:
+    """The swept accelerator grid, area-aware relative to the reference
+    16x16 / 512 kB design:
+
+      static power scales with PE count (clock tree + leakage ~ area),
+      SRAM pJ/byte scales with sqrt(capacity) (longer bit/word lines),
+      the activation budget keeps the reference 3/8 split of SRAM.
+
+    This is what turns the sweep into a real tradeoff: a 32x32 array
+    quarters the compute cycles but quadruples leakage, so small
+    workloads pay in energy what they gain in latency.
+    """
+    base = base or HWSpec()
+    ref_pes = base.rows * base.cols
+    out = []
+    for (r, c), skb, rkb in itertools.product(pe_shapes, sram_kb, rf_kb):
+        sram = skb * 1024
+        out.append(dataclasses.replace(
+            base, rows=r, cols=c, sram_bytes=sram,
+            act_budget_bytes=int(sram * 3 / 8),
+            output_rf_bytes=rkb * 1024,
+            static_mw=base.static_mw * (r * c) / ref_pes,
+            e_sram_byte=base.e_sram_byte
+            * (sram / base.sram_bytes) ** 0.5))
+    return out
+
+
+def sweep(layers: List[Layer], variants: Optional[Iterable[HWSpec]] = None,
+          *, workload: str = "custom") -> List[DsePoint]:
+    """Run the auto-scheduler on every HW variant."""
+    pts: List[DsePoint] = []
+    for hw in (variants if variants is not None else hw_variants()):
+        sched = auto_schedule(layers, hw, workload=workload)
+        pts.append(DsePoint(
+            rows=hw.rows, cols=hw.cols, sram_kb=hw.sram_bytes // 1024,
+            rf_kb=hw.output_rf_bytes // 1024,
+            latency_s=sched.cost["latency_s"],
+            energy_j=sched.cost["energy_j"], edp=sched.cost["edp"],
+            schedule=sched))
+    return pts
+
+
+def dominates(a: DsePoint, b: DsePoint) -> bool:
+    return (a.latency_s <= b.latency_s and a.energy_j <= b.energy_j
+            and (a.latency_s < b.latency_s or a.energy_j < b.energy_j))
+
+
+def pareto_front(points: Sequence[DsePoint]) -> List[DsePoint]:
+    """Non-dominated (latency, energy) subset, latency-sorted."""
+    front = [p for p in points
+             if not any(dominates(q, p) for q in points if q is not p)]
+    # drop duplicate (latency, energy) pairs deterministically
+    seen: Dict[Tuple[float, float], DsePoint] = {}
+    for p in sorted(front, key=lambda p: (p.latency_s, p.energy_j,
+                                          p.label)):
+        seen.setdefault((p.latency_s, p.energy_j), p)
+    return list(seen.values())
+
+
+def edp_best(points: Sequence[DsePoint]) -> DsePoint:
+    return min(points, key=lambda p: (p.edp, p.label))

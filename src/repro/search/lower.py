@@ -1,0 +1,156 @@
+"""Lower a searched schedule onto concrete Pallas launch parameters.
+
+The search operates on the zigzag-lite abstract machine; this bridge
+maps its decisions onto the repo's real TPU kernels so the DSE result
+drives actual launches:
+
+  fused IBN group    -> kernels.ops.fused_ibn   (block_m, block_f)
+  MAC + fused LN     -> kernels.ops.matmul_ln   (block_m, block_k)
+  attention matmuls  -> kernels.ops.flash_attention (block_q, block_k)
+
+Abstract tile sizes are snapped to TPU-friendly blocks: powers of two,
+multiples of the 8-row sublane where the extent allows, clamped to the
+tensor extents (the ``ops`` wrappers pad ragged remainders).  The
+emitted parameter dicts are directly splattable into the kernel calls —
+``tests/test_search.py`` runs them through the kernel-vs-``ref``
+correctness harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.workload import (MAC_OPS, MATMUL, NORM, PWCONV, SOFTMAX,
+                                 Layer)
+from repro.search import tiler
+
+# VMEM is ~16 MB/core; keep resident blocks far below it and aligned to
+# the f32 (8, 128) tile granularity where the extents allow.
+_SUBLANE = 8
+_MAX_BLOCK_M = 256
+_MAX_BLOCK_F = 512
+
+
+def _pow2_floor(v: int) -> int:
+    p = 1
+    while p * 2 <= v:
+        p *= 2
+    return p
+
+
+def _snap(v: int, lo: int, hi: int, extent: int) -> int:
+    """Power-of-two block in [lo, hi] near v, clamped to the extent."""
+    b = _pow2_floor(max(lo, min(v, hi)))
+    return _pow2_floor(max(1, min(b, extent)))
+
+
+@dataclasses.dataclass(frozen=True)
+class LoweredKernel:
+    kernel: str                    # "fused_ibn" | "matmul_ln" | "flash_attention"
+    layer_names: Tuple[str, ...]
+    params: Dict[str, int]
+
+
+def lower_ibn(expand: Layer, project: Layer, *, local_buffer: int,
+              tile_x: Optional[int] = None,
+              tile_c: Optional[int] = None) -> LoweredKernel:
+    """IBN fusion group -> fused_ibn(block_m, block_f): the searched
+    (tile_x, tile_c) of the expanded intermediate become the (row, d_ff)
+    VMEM block of the Pallas grid.
+
+    The partition's tile (which already honored any full-width stats
+    constraint) is authoritative when given; the tile search re-runs
+    only when no tile was recorded.
+    """
+    F = expand.k
+    if tile_x is None or tile_c is None:
+        ft = tiler.optimize_tile(expand, project,
+                                 local_buffer=local_buffer)
+        if ft is None:      # no feasible abstract tile: minimal blocks
+            bm, bf = _SUBLANE, min(128, _pow2_floor(F))
+            return LoweredKernel("fused_ibn",
+                                 (expand.name, project.name),
+                                 {"block_m": bm, "block_f": bf})
+        tile_x, tile_c = ft.tile_x, ft.tile_c
+    bm = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M,
+               expand.b * expand.ox * expand.oy)
+    bf = _snap(tile_c, _SUBLANE, _MAX_BLOCK_F, F)
+    return LoweredKernel("fused_ibn", (expand.name, project.name),
+                         {"block_m": bm, "block_f": bf})
+
+
+def lower_matmul_ln(mac: Layer, norm: Layer, *, tile_x: int,
+                    tile_c: int) -> LoweredKernel:
+    """MAC layer with a fused trailing LayerNorm -> matmul_ln blocks.
+    block_m covers the pixel tile (rows resident for the stats pass);
+    block_k covers the reduction tile."""
+    n_pix = mac.b * mac.ox * mac.oy
+    red = mac.c * mac.fx * mac.fy
+    bm = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M, n_pix)
+    bk = _snap(tile_c, _SUBLANE, _MAX_BLOCK_F, red)
+    # the kernel requires block_k | K; fall back through divisors
+    while red % bk:
+        bk //= 2
+    return LoweredKernel("matmul_ln", (mac.name, norm.name),
+                         {"block_m": bm, "block_k": max(1, bk)})
+
+
+def lower_attention(qk: Layer, *, tile_x: int,
+                    seq: Optional[int] = None) -> LoweredKernel:
+    """Attention score/value matmuls -> flash_attention blocks.  ``seq``
+    is the softmax extent (the score-row length: N for standard
+    attention, the head dim for XCA); blocks tile the online-softmax
+    streaming over it."""
+    if seq is None:
+        seq = qk.c
+    bq = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M, seq)
+    bk = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M, seq)
+    return LoweredKernel("flash_attention", (qk.name,),
+                         {"block_q": bq, "block_k": bk})
+
+
+def lower_schedule(layers: Sequence[Layer], groups, tiles: Dict[str, dict],
+                   *, local_buffer: int) -> List[LoweredKernel]:
+    """Emit kernel launch parameters for every lowerable construct in a
+    partitioned schedule.
+
+    ``groups`` is the partition's group list (objects with start/end and
+    fused_nonlinear); ``tiles`` maps group-head layer names to tile
+    summaries (only used for pixel-tile hints; missing entries fall back
+    to kernel defaults).
+    """
+    out: List[LoweredKernel] = []
+    for g in groups:
+        sl = layers[g.start:g.end]
+        macs = [l for l in sl if l.op in MAC_OPS]
+        names = {l.name for l in sl}
+        head = macs[0].name if macs else None
+        tinfo = tiles.get(head or "", {})
+        rec_tx = tinfo.get("tile_x") or None       # partition's tile, if any
+        rec_tc = tinfo.get("tile_c") or None
+        tx = int(rec_tx or 64)
+        tc = int(rec_tc or 128)
+        # MAC->MAC pixel-aligned pair: score @ softmax @ value chains are
+        # the flash-attention kernel; anything else is the fused-IBN one
+        sm = next((l for l in sl if l.op == SOFTMAX), None)
+        if len(macs) == 2 and tiler.chain_compatible(macs[0], macs[1]):
+            if sm is not None:
+                out.append(lower_attention(macs[0], tile_x=tx, seq=sm.c))
+            else:
+                out.append(lower_ibn(macs[0], macs[1],
+                                     local_buffer=local_buffer,
+                                     tile_x=rec_tx, tile_c=rec_tc))
+            continue
+        if len(macs) == 1:
+            mac = macs[0]
+            trailing_norm = next(
+                (l for l in sl if l.op == NORM and l.name in
+                 set(g.fused_nonlinear)), None)
+            if mac.op in (PWCONV, MATMUL) and trailing_norm is not None:
+                out.append(lower_matmul_ln(mac, trailing_norm,
+                                           tile_x=tx, tile_c=tc))
+                continue
+            if mac.op == MATMUL and sm is not None:
+                out.append(lower_attention(mac, tile_x=tx, seq=sm.c))
+                continue
+    return out

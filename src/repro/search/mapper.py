@@ -1,0 +1,188 @@
+"""Spatial-mapping + temporal-loop-order enumeration (ZigZag-style).
+
+The paper hand-picks three spatial mappings (OX|C, C|K, C|FX) and one
+pixelwise temporal re-ordering; this module opens the full space:
+
+  spatial  : any ordered pair of loop dims (row_dim, col_dim) unrolled
+             over a parametric rows x cols PE array — the legacy trio is
+             three points of the ~42-point space.  Costed with
+             ``core.dataflow.cycles_generic``.
+  temporal : permutations of the three macro loops (X = pixels,
+             K = output channels, C = reduction), tiled against the
+             input-mem / output-RF budgets of ``costmodel.HWSpec``.
+             Loop order decides which tensor stays resident and which
+             re-streams from SRAM — and whether the pixelwise (C2)
+             nonlinear fusion is legal at writeback.
+
+``best_mapping``/``best_temporal`` are what the auto-scheduler
+(`repro.search.auto`) calls per layer; nothing here is EdgeNeXt-specific.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterator, List, Optional, Tuple
+
+from repro.core import dataflow
+from repro.core.costmodel import HWSpec
+from repro.core.workload import MAC_OPS, Layer
+
+GenericMapping = Tuple[str, str]
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Spatial mappings
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MappingChoice:
+    mapping: GenericMapping
+    cycles: int
+    utilization: float
+
+
+def enumerate_mappings(layer: Layer) -> Iterator[GenericMapping]:
+    """All ordered dim pairs worth unrolling for this layer (dims of
+    extent 1 are skipped as row/col candidates — unrolling them is a
+    no-op the temporal loops already cover)."""
+    sizes = dataflow.dim_sizes(layer)
+    useful = [d for d in dataflow.SPATIAL_DIMS if sizes[d] > 1]
+    if len(useful) < 2:
+        useful = list(dataflow.SPATIAL_DIMS[:2]) if not useful else \
+            useful + [d for d in dataflow.SPATIAL_DIMS if d != useful[0]][:1]
+    yield from itertools.permutations(useful, 2)
+
+
+def best_mapping(layer: Layer, rows: int = 16, cols: int = 16, *,
+                 fixed_wiring: bool = False) -> MappingChoice:
+    """Min-cycle spatial mapping for one layer (deterministic ties)."""
+    assert layer.op in MAC_OPS, layer.op
+    best: Optional[MappingChoice] = None
+    for m in enumerate_mappings(layer):
+        cyc = dataflow.cycles_generic(layer, m, rows, cols,
+                                      fixed_wiring=fixed_wiring)
+        if best is None or (cyc, m) < (best.cycles, best.mapping):
+            best = MappingChoice(m, cyc,
+                                 layer.macs / (cyc * rows * cols))
+    assert best is not None
+    return best
+
+
+def best_fixed_mapping(layers: List[Layer], rows: int = 16,
+                       cols: int = 16) -> GenericMapping:
+    """Single network-wide mapping for the non-reconfigurable array: the
+    mapping minimizing *total* cycles when every layer must use it."""
+    cands: set = set()
+    for l in layers:
+        if l.op in MAC_OPS:
+            cands.update(enumerate_mappings(l))
+    best_m, best_cyc = None, None
+    for m in sorted(cands):
+        tot = sum(dataflow.cycles_generic(l, m, rows, cols,
+                                          fixed_wiring=True)
+                  for l in layers if l.op in MAC_OPS)
+        if best_cyc is None or tot < best_cyc:
+            best_m, best_cyc = m, tot
+    assert best_m is not None
+    return best_m
+
+
+# ---------------------------------------------------------------------------
+# Temporal loop orders
+# ---------------------------------------------------------------------------
+
+MACRO_LOOPS = ("x", "k", "c")      # pixels | output channels | reduction
+
+
+@dataclasses.dataclass(frozen=True)
+class TemporalChoice:
+    order: Tuple[str, str, str]    # outermost -> innermost
+    tile_x: int
+    tile_k: int
+    tile_c: int
+    sram_bytes: int                # refined traffic incl. forced re-reads
+    pixelwise: bool                # channel-stat fusion legal at writeback
+
+
+def macro_extents(layer: Layer) -> Tuple[int, int, int]:
+    """(n_x, n_k, n_c): pixels, output channels, reduction extent."""
+    n_x = layer.b * layer.ox * layer.oy
+    if layer.op == "dwconv":
+        return n_x, layer.c, layer.fx * layer.fy
+    return n_x, layer.k, layer.c * layer.fx * layer.fy
+
+
+def _pow2s_upto(n: int) -> List[int]:
+    out, v = [], 1
+    while v < n:
+        out.append(v)
+        v *= 2
+    out.append(n)
+    return out
+
+
+def _traffic(layer: Layer, order: Tuple[str, ...], trips: dict) -> int:
+    """SRAM bytes moved under ``order``.  A tensor re-streams once per
+    iteration of a loop that does not index it and sits outside one of
+    its loops; the innermost loop reuses whatever is resident."""
+    inner = order[-1]
+    w = layer.weight_bytes * (1 if inner == "x" else trips["x"])
+    x = layer.input_bytes * (1 if inner == "k" else trips["k"])
+    # partial outputs spill + reload per extra reduction round
+    o = layer.output_bytes * (1 if inner == "c" else 2 * trips["c"] - 1)
+    return w + x + o
+
+
+def _pixelwise_ok(order: Tuple[str, ...], trips: dict) -> bool:
+    """C2 legality: all output channels of a pixel block must be final
+    in the writeback buffer before the block is evicted — the reduction
+    must complete innermost and the K loop must not be split across
+    outer X iterations."""
+    if order[-1] != "c" and trips["c"] > 1:
+        return False
+    xi, ki = order.index("x"), order.index("k")
+    return ki > xi or trips["k"] == 1 or trips["x"] == 1
+
+
+def enumerate_temporal(layer: Layer, hw: HWSpec) -> Iterator[TemporalChoice]:
+    """Loop orders x budget-driven tile sizes for one MAC layer.
+
+    Tiles are bounded by the HW buffers: the output RF holds the
+    (tile_x, tile_k) 32-bit psum block; the input memory holds the
+    (tile_x, tile_c) operand block.
+    """
+    n_x, n_k, n_c = macro_extents(layer)
+    bytes_per = max(1, layer.bits // 8)
+    for tx in _pow2s_upto(n_x):
+        tk = min(n_k, hw.output_rf_bytes // (4 * tx))
+        tc = min(n_c, hw.input_mem_bytes // (bytes_per * tx))
+        if tk < 1 or tc < 1:
+            continue
+        trips = {"x": _ceil(n_x, tx), "k": _ceil(n_k, tk),
+                 "c": _ceil(n_c, tc)}
+        for order in itertools.permutations(MACRO_LOOPS):
+            yield TemporalChoice(
+                order=order, tile_x=tx, tile_k=tk, tile_c=tc,
+                sram_bytes=_traffic(layer, order, trips),
+                pixelwise=_pixelwise_ok(order, trips))
+
+
+def best_temporal(layer: Layer, hw: HWSpec, *,
+                  require_pixelwise: bool = False
+                  ) -> Optional[TemporalChoice]:
+    """Min-traffic temporal schedule; optionally restricted to orders
+    where the C2 pixelwise fusion of trailing channel-stat nonlinears is
+    legal.  Returns None only if no tile fits the buffers at all."""
+    best: Optional[TemporalChoice] = None
+    for t in enumerate_temporal(layer, hw):
+        if require_pixelwise and not t.pixelwise:
+            continue
+        if best is None or (t.sram_bytes, t.order, t.tile_x) < \
+                (best.sram_bytes, best.order, best.tile_x):
+            best = t
+    return best

@@ -1,0 +1,205 @@
+"""Dynamic-programming fusion partitioner over the layer chain.
+
+Generalizes the two hand-coded fusion rules of ``core.fusion`` — C2
+(nonlinears melt into their producing MAC layer) and C3 (the IBN
+pw-expand/pw-project pair runs depth-first) — to arbitrary contiguous
+fusion groups: the chain is segmented into groups; inside a group no
+tensor ever touches DRAM (nonlinears fuse pixelwise into the writeback
+path, MAC-to-MAC intermediates live tiled in the local buffer); at a
+group boundary the tensor spills to DRAM iff it exceeds the SRAM
+activation budget.
+
+``partition_chain`` minimizes an additive energy scalar (compute + SRAM
+/ RF / DRAM traffic + static leakage over cycles) with
+``dp[i] = min_j dp[j] + group_cost(j, i)``.  Neither IBN roles nor the
+C2/C3 flags are consulted — when fusing an expand/project pair beats
+spilling the 4x intermediate, the DP *rediscovers* IBN fusion; when
+attaching a LayerNorm to its producer beats bus-streaming it, it
+rediscovers pixelwise fusion.  Group feasibility (tile fits the local
+buffer, chains are pixel-aligned) comes from ``repro.search.tiler``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.costmodel import HWSpec
+from repro.core.fusion import SpillEdge
+from repro.core.workload import MAC_OPS, NORM, SOFTMAX, Layer
+from repro.search import tiler
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    start: int                       # layers[start:end]
+    end: int
+    tile: Optional[tiler.GroupTile]  # None for single-MAC / MAC-less
+    fused_nonlinear: Tuple[str, ...]
+    unfused_nonlinear: Tuple[str, ...]
+
+
+@dataclasses.dataclass
+class Partition:
+    groups: List[Group]
+    edges: List[SpillEdge]
+    cost_pj: float
+
+    @property
+    def fused_nonlinear(self) -> Tuple[str, ...]:
+        out: List[str] = []
+        for g in self.groups:
+            out.extend(g.fused_nonlinear)
+        return tuple(out)
+
+
+def _static_pj_per_cycle(hw: HWSpec) -> float:
+    return hw.static_mw * 1e-3 / hw.clock_hz * 1e12
+
+
+def _mac_base_pj(l: Layer, cyc: int, hw: HWSpec, *,
+                 include_sram: bool = True) -> float:
+    """Energy of one MAC layer outside fusion decisions (mirrors
+    costmodel._mac_layer_cost accounting)."""
+    rf = 4 * (l.macs // max(hw.cols, 1) + l.output_elems)
+    pj = l.macs * hw.e_mac + rf * hw.e_rf_byte + \
+        l.weight_bytes * hw.e_dram_byte + cyc * _static_pj_per_cycle(hw)
+    if include_sram:
+        pj += (l.input_bytes + l.output_bytes + l.weight_bytes) \
+            * hw.e_sram_byte
+    return pj
+
+
+def _unfused_nonlinear_pj(l: Layer, hw: HWSpec) -> float:
+    passes = 2 if l.op in (NORM, SOFTMAX) else 1
+    stream = 2 * l.input_bytes
+    stall = passes * _ceil(stream, hw.dram_bus_bytes_per_cycle)
+    return (passes * stream * hw.e_sram_byte
+            + l.input_bytes * hw.e_rf_byte
+            + stall * _static_pj_per_cycle(hw))
+
+
+def _group_cost(layers: Sequence[Layer], j: int, i: int,
+                cycles_by_name: Dict[str, int], hw: HWSpec,
+                local_buffer: int) -> Optional[Tuple[float, Group]]:
+    """Cost + metadata of fusing layers[j:i] into one group, or None if
+    the slice is not a feasible group."""
+    sl = layers[j:i]
+    macs = [l for l in sl if l.op in MAC_OPS]
+    fused: List[str] = []
+    unfused: List[str] = []
+    pj = 0.0
+    seen_mac = False
+    for l in sl:
+        if l.op in MAC_OPS:
+            seen_mac = True
+        elif seen_mac:
+            fused.append(l.name)       # pixelwise writeback fusion (C2)
+        else:
+            unfused.append(l.name)     # no producer in this group
+            pj += _unfused_nonlinear_pj(l, hw)
+
+    tile: Optional[tiler.GroupTile] = None
+    if len(macs) > 1:
+        tile = tiler.tile_group(sl, local_buffer=local_buffer)
+        if tile is None:
+            return None
+        # depth-first group: SRAM traffic comes from the tiler (input
+        # re-reads per channel round + weight re-streams per x slab);
+        # interior tensors move only through the local buffer (RF-class)
+        interior = sum(l.output_bytes for l in macs[:-1])
+        pj += tile.sram_traffic * hw.e_sram_byte \
+            + 2 * interior * hw.e_rf_byte
+        for l in macs:
+            pj += _mac_base_pj(l, cycles_by_name[l.name], hw,
+                               include_sram=False)
+    else:
+        for l in macs:
+            pj += _mac_base_pj(l, cycles_by_name[l.name], hw)
+
+    return pj, Group(start=j, end=i, tile=tile, fused_nonlinear=tuple(fused),
+                     unfused_nonlinear=tuple(unfused))
+
+
+def _boundary_edge(layers: Sequence[Layer], groups: List[Group],
+                   gi: int, act_budget: int) -> Optional[SpillEdge]:
+    """Spill edge between groups[gi] and groups[gi+1] (None if the
+    boundary tensor fits the SRAM activation budget)."""
+    g, nxt = groups[gi], groups[gi + 1]
+    nbytes = layers[g.end - 1].output_bytes
+    if nbytes <= act_budget:
+        return None
+    prod = g.end - 1
+    for idx in range(g.end - 1, g.start - 1, -1):
+        if layers[idx].op in MAC_OPS:
+            prod = idx
+            break
+    cons = nxt.start
+    for idx in range(nxt.start, nxt.end):
+        if layers[idx].op in MAC_OPS:
+            cons = idx
+            break
+    is_ibn = layers[prod].ibn_role in ("expand", "act")
+    return SpillEdge(producer=prod, consumer=cons, nbytes=nbytes,
+                     is_ibn=is_ibn)
+
+
+def partition_chain(layers: Sequence[Layer],
+                    cycles_by_name: Dict[str, int],
+                    hw: Optional[HWSpec] = None, *,
+                    act_budget: Optional[int] = None,
+                    local_buffer: Optional[int] = None,
+                    max_span: int = 10) -> Partition:
+    """Optimal contiguous segmentation of the chain into fusion groups.
+
+    ``cycles_by_name`` carries each MAC layer's compute cycles under its
+    chosen spatial mapping (the partitioner is mapping-agnostic).
+    """
+    hw = hw or HWSpec()
+    if act_budget is None:
+        act_budget = hw.act_budget_bytes
+    if local_buffer is None:
+        local_buffer = hw.output_rf_bytes
+    n = len(layers)
+    INF = float("inf")
+    dp: List[float] = [INF] * (n + 1)
+    dp[0] = 0.0
+    choice: List[Optional[Tuple[int, float, Group]]] = [None] * (n + 1)
+
+    for i in range(1, n + 1):
+        for j in range(max(0, i - max_span), i):
+            if dp[j] == INF:
+                continue
+            gc = _group_cost(layers, j, i, cycles_by_name, hw, local_buffer)
+            if gc is None:
+                continue
+            pj, grp = gc
+            # boundary spill charged when this group is *opened*, i.e.
+            # the tensor entering it came from the previous boundary
+            if j > 0:
+                nbytes = layers[j - 1].output_bytes
+                if nbytes > act_budget:
+                    pj += 2 * nbytes * hw.e_dram_byte
+            if dp[j] + pj < dp[i]:
+                dp[i] = dp[j] + pj
+                choice[i] = (j, pj, grp)
+
+    assert dp[n] < INF, "no feasible partition (single layers are always" \
+                        " feasible — this indicates a bug)"
+    groups: List[Group] = []
+    i = n
+    while i > 0:
+        j, _, grp = choice[i]        # type: ignore[misc]
+        groups.append(grp)
+        i = j
+    groups.reverse()
+
+    edges: List[SpillEdge] = []
+    for gi in range(len(groups) - 1):
+        e = _boundary_edge(layers, groups, gi, act_budget)
+        if e is not None:
+            edges.append(e)
+    return Partition(groups=groups, edges=edges, cost_pj=dp[n])

@@ -1,0 +1,164 @@
+"""Budget-driven tile search for depth-first fusion groups.
+
+Replaces the fixed 9-candidate ``candidates_x`` list of
+``core.fusion.optimize_tile`` with an enumeration derived from the
+buffer budget itself, and generalizes from the IBN pw-pair to arbitrary
+chains of pixel-aligned MAC layers (pointwise / matmul) with interleaved
+elementwise or channel-stat nonlinears.
+
+Tiling model (the paper's Fig 4 depth-first schedule):
+  * the group input streams from SRAM; every intermediate tensor lives
+    only in the local buffer, tiled along (X = pixels, C = channels);
+  * a 2-layer group may tile the single intermediate along C and
+    contract each (tile_x, tile_c) slab into the output accumulator
+    immediately (re-reading the input once per C round);
+  * deeper chains keep full-width x-slabs resident; the peak footprint
+    is the widest adjacent pair of intermediates (channel tiling would
+    force partial re-computation);
+  * an interior channel-stat nonlinear (norm/softmax) needs its whole
+    reduction vector resident -> full channel width at that edge.
+
+Infeasible tilings (tile cannot fit the buffer) are *skipped*, never
+returned — a group with no feasible tile is simply not fusible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core import fusion
+from repro.core.fusion import FusedTile
+from repro.core.workload import MAC_OPS, NORM, SOFTMAX, Layer
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _candidates_x(n: int, widest: int, bytes_per: int,
+                  local_buffer: int) -> List[int]:
+    """Budget-driven tile_x candidates: powers of two up to n, plus the
+    two budget pivots — the largest x-tile that keeps the widest
+    intermediate fully resident, and the largest that fits a single
+    channel."""
+    cands = set()
+    v = 1
+    while v < n:
+        cands.add(v)
+        v *= 2
+    cands.add(n)
+    full_width = local_buffer // max(1, widest * bytes_per)
+    single = local_buffer // max(1, bytes_per)
+    for pivot in (full_width, single):
+        if 1 <= pivot:
+            cands.add(min(pivot, n))
+    return sorted(cands)
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupTile:
+    """Depth-first tiling of a fused group."""
+    tile_x: int                  # pixels per slab
+    tile_c: int                  # channels per slab of the widest edge
+    buffer_bytes: int            # peak live intermediate footprint
+    weight_rereads: int          # full weight re-streams (per x-tile)
+    sram_traffic: int            # total SRAM bytes for the group
+
+
+def optimize_tile(expand: Layer, project: Layer, *, local_buffer: int,
+                  full_width: bool = False) -> Optional[FusedTile]:
+    """ZigZag-style (tile_x, tile_c) search for a fused MAC pair with the
+    candidate list derived from ``local_buffer`` instead of hardcoded.
+
+    One traffic model only: this delegates to ``core.fusion``'s
+    optimizer, supplying budget-driven candidates.  Returns None when no
+    tile fits (the pair is not fusible at this budget).
+    ``full_width=True`` forces the intermediate to keep its whole
+    channel extent resident (required when a channel-stat nonlinear sits
+    between the two layers).
+    """
+    n = expand.ox * expand.oy * expand.b
+    c_mid = expand.k
+    bytes_per = max(1, expand.bits // 8)
+    cands = tuple(_candidates_x(n, c_mid, bytes_per, local_buffer))
+    try:
+        return fusion.optimize_tile(expand, project,
+                                    local_buffer=local_buffer,
+                                    candidates_x=cands,
+                                    full_width=full_width)
+    except ValueError:
+        return None
+
+
+def chain_compatible(a: Layer, b: Layer) -> bool:
+    """Can MAC layer ``b`` consume ``a``'s output depth-first?  Requires
+    pixel alignment (1x1 channel mixing on the same pixel grid)."""
+    if a.op not in ("pwconv", "matmul") or b.op not in ("pwconv", "matmul"):
+        return False
+    pa = a.b * a.ox * a.oy
+    pb = b.b * b.ox * b.oy
+    return pa == pb and a.k == b.c
+
+
+def tile_group(group: Sequence[Layer], *, local_buffer: int
+               ) -> Optional[GroupTile]:
+    """Feasibility + tiling for a fusion-group layer slice.
+
+    The slice holds >= 1 MAC layer plus interleaved nonlinears.  A single
+    MAC layer has no interior tensor (trivially feasible).  Multi-MAC
+    slices run depth-first; returns None when the chain is incompatible
+    or no tile fits the buffer.
+    """
+    macs = [l for l in group if l.op in MAC_OPS]
+    if not macs:
+        return None
+    if len(macs) == 1:
+        return GroupTile(tile_x=0, tile_c=0, buffer_bytes=0,
+                         weight_rereads=1, sram_traffic=0)
+    for a, b in zip(macs, macs[1:]):
+        if not chain_compatible(a, b):
+            return None
+
+    # does a channel-stat nonlinear sit between two MAC layers?
+    stats_interior = False
+    seen_mac = 0
+    for l in group:
+        if l.op in MAC_OPS:
+            seen_mac += 1
+        elif l.op in (NORM, SOFTMAX) and 0 < seen_mac < len(macs):
+            stats_interior = True
+
+    if len(macs) == 2:
+        ft = optimize_tile(macs[0], macs[1], local_buffer=local_buffer,
+                           full_width=stats_interior)
+        if ft is None:
+            return None
+        return GroupTile(tile_x=ft.tile_x, tile_c=ft.tile_c,
+                         buffer_bytes=ft.buffer_bytes,
+                         weight_rereads=ft.weight_rereads,
+                         sram_traffic=ft.sram_traffic)
+
+    # deeper chain: full-width x-slabs; an intermediate is live from its
+    # production until its consumer's slab is complete, so the peak
+    # footprint is the widest *adjacent pair* of intermediates (earlier
+    # ones are discarded as the slab walks down the chain)
+    n = macs[0].b * macs[0].ox * macs[0].oy
+    bytes_per = max(1, macs[0].bits // 8)
+    widths = [l.k for l in macs[:-1]]
+    peak_width = max(a + b for a, b in zip(widths, widths[1:])) \
+        if len(widths) > 1 else widths[0]
+    best: Optional[GroupTile] = None
+    for tx in _candidates_x(n, peak_width, bytes_per, local_buffer):
+        buf = tx * peak_width * bytes_per
+        if buf > local_buffer:
+            continue
+        n_xt = _ceil(n, tx)
+        w_bytes = sum(l.weight_bytes for l in macs)
+        traffic = (macs[0].input_bytes + w_bytes * n_xt
+                   + macs[-1].output_bytes)
+        cand = GroupTile(tile_x=tx, tile_c=max(widths),
+                         buffer_bytes=buf,
+                         weight_rereads=n_xt, sram_traffic=traffic)
+        if best is None or cand.sram_traffic < best.sram_traffic:
+            best = cand
+    return best

@@ -14,7 +14,10 @@ from repro.configs import ARCHS, get_config
 from repro.models import get_module, params as param_lib
 from repro.runtime.sharding import PROFILES
 
+# JAX_PLATFORMS=cpu: the image ships libtpu, and without the override the
+# child process burns 60+s probing a TPU backend that does not exist.
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "JAX_PLATFORMS": "cpu",
        "XLA_FLAGS": "--xla_force_host_platform_device_count=8"}
 
 

@@ -7,7 +7,10 @@ import subprocess
 import sys
 from pathlib import Path
 
-ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+# JAX_PLATFORMS=cpu: the image ships libtpu; without the override the
+# child process burns 60+s probing a TPU backend that does not exist.
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "JAX_PLATFORMS": "cpu"}
 
 
 def test_dryrun_single_cell(tmp_path):

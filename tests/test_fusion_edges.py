@@ -1,0 +1,137 @@
+"""Edge-case coverage for the fusion planner (core.fusion).
+
+Targets the spill-edge corner cases the network-level tests never hit:
+trailing nonlinear runs at the end of the chain, tensors exactly at the
+activation-SRAM boundary, the unfused path where the consumer is itself
+a nonlinear layer — plus the optimize_tile buffer-feasibility contract
+(infeasible candidates are skipped, never returned).
+"""
+import pytest
+
+from repro.core.fusion import optimize_tile, spill_edges
+from repro.core.workload import (ACT, ELEMWISE, NORM, PWCONV, Layer)
+
+
+def _pw(name, n, c, k, **kw):
+    return Layer(name, PWCONV, k=k, c=c, ox=n, **kw)
+
+
+# ---------------------------------------------------------------------------
+# spill_edges: trailing nonlinears
+# ---------------------------------------------------------------------------
+
+
+def test_trailing_nonlinears_produce_no_edges():
+    """A chain ending in nonlinear layers has no consumer MAC layer —
+    with C2 the trailing run melts into the last producer and no edge
+    past it may be emitted (regression: the search for the next MAC
+    must not run off the end)."""
+    big = 1 << 20
+    layers = [
+        _pw("mac0", n=big // 64, c=32, k=64),          # 1 MiB out
+        Layer("ln_tail", NORM, c=64, ox=big // 64),
+        Layer("res_tail", ELEMWISE, c=64, ox=big // 64),
+    ]
+    edges = spill_edges(layers, act_sram_budget=1024,
+                        fuse_nonlinear=True, fuse_ibn=False)
+    assert edges == []
+
+
+def test_trailing_nonlinear_unfused_still_no_dangling_edge():
+    """Without C2 the final nonlinear's own output has no consumer, so
+    only the MAC->nonlinear edge exists."""
+    n = 1 << 14
+    layers = [
+        _pw("mac0", n=n, c=32, k=64),
+        Layer("act_tail", ACT, c=64, ox=n),
+    ]
+    edges = spill_edges(layers, act_sram_budget=0,
+                        fuse_nonlinear=False, fuse_ibn=False)
+    assert [(e.producer, e.consumer) for e in edges] == [(0, 1)]
+    assert edges[0].nbytes == layers[0].output_bytes
+
+
+# ---------------------------------------------------------------------------
+# spill_edges: exact budget boundary
+# ---------------------------------------------------------------------------
+
+
+def test_tensor_exactly_at_budget_does_not_spill():
+    """<= is 'fits': a tensor of exactly act_sram_budget bytes stays on
+    chip; one byte more spills."""
+    n, k = 1024, 64
+    layers = [
+        _pw("mac0", n=n, c=32, k=k),
+        _pw("mac1", n=n, c=k, k=32),
+    ]
+    exact = layers[0].output_bytes
+    assert spill_edges(layers, act_sram_budget=exact,
+                       fuse_nonlinear=True, fuse_ibn=False) == []
+    spilled = spill_edges(layers, act_sram_budget=exact - 1,
+                          fuse_nonlinear=True, fuse_ibn=False)
+    assert len(spilled) == 1 and spilled[0].nbytes == exact
+
+
+# ---------------------------------------------------------------------------
+# spill_edges: unfused consumer is itself nonlinear
+# ---------------------------------------------------------------------------
+
+
+def test_unfused_chain_edges_between_nonlinear_pairs():
+    """fuse_nonlinear=False: every adjacent pair is an edge, including
+    nonlinear->nonlinear; each edge carries the producer's own output
+    size (the nonlinear keeps the element count)."""
+    n = 1 << 14
+    layers = [
+        _pw("mac0", n=n, c=32, k=64),
+        Layer("ln", NORM, c=64, ox=n),
+        Layer("act", ACT, c=64, ox=n),
+        _pw("mac1", n=n, c=64, k=32),
+    ]
+    edges = spill_edges(layers, act_sram_budget=0,
+                        fuse_nonlinear=False, fuse_ibn=False)
+    assert [(e.producer, e.consumer) for e in edges] == \
+        [(0, 1), (1, 2), (2, 3)]
+    for e in edges:
+        assert e.nbytes == layers[e.producer].output_bytes
+
+
+def test_fused_run_reattaches_to_next_mac_with_final_size():
+    """With C2 a MAC -> norm -> act -> MAC run is ONE edge MAC->MAC,
+    sized after the last fused nonlinear."""
+    n = 1 << 14
+    layers = [
+        _pw("mac0", n=n, c=32, k=64),
+        Layer("ln", NORM, c=64, ox=n),
+        Layer("act", ACT, c=64, ox=n),
+        _pw("mac1", n=n, c=64, k=32),
+    ]
+    edges = spill_edges(layers, act_sram_budget=0,
+                        fuse_nonlinear=True, fuse_ibn=False)
+    assert [(e.producer, e.consumer) for e in edges] == [(0, 3)]
+    assert edges[0].nbytes == layers[2].output_bytes
+
+
+# ---------------------------------------------------------------------------
+# optimize_tile feasibility contract
+# ---------------------------------------------------------------------------
+
+
+def test_optimize_tile_never_exceeds_buffer():
+    """Candidates whose T tile cannot fit (tile_x * bits > buffer forces
+    tile_c < 1) must be skipped — the returned tile always fits."""
+    exp = _pw("pw1", n=4096, c=48, k=192)
+    proj = _pw("pw2", n=4096, c=192, k=48)
+    for buf in (64, 256, 1024, 24 * 1024):
+        t = optimize_tile(exp, proj, local_buffer=buf)
+        assert t.buffer_bytes <= buf, (buf, t)
+        assert t.tile_c >= 1
+
+
+def test_optimize_tile_infeasible_raises():
+    """A buffer too small for even a single element has no feasible
+    tile; the bug was returning tile_c=1 with buffer_bytes > budget."""
+    exp = _pw("pw1", n=4096, c=48, k=192)
+    proj = _pw("pw2", n=4096, c=192, k=48)
+    with pytest.raises(ValueError):
+        optimize_tile(exp, proj, local_buffer=0)

@@ -29,6 +29,7 @@ def _assert_close(out, want, dtype):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("m,d,f", [(64, 32, 128), (100, 48, 96),
                                    (17, 64, 256), (256, 128, 512)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -66,6 +67,7 @@ def test_fused_ibn_block_invariance():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("m,k,n", [(64, 32, 48), (100, 64, 32),
                                    (32, 128, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -101,6 +103,7 @@ def test_matmul_ln_rows_normalized():
 @pytest.mark.parametrize("sq,sk,bq,bk", [(64, 64, 16, 16), (64, 64, 64, 16),
                                          (128, 64, 32, 32),
                                          (64, 128, 16, 64)])
+@pytest.mark.slow
 @pytest.mark.parametrize("causal,window", [(True, None), (False, None),
                                            (True, 24)])
 def test_flash_attention_sweep(sq, sk, bq, bk, causal, window):
@@ -133,6 +136,7 @@ def test_flash_attention_bf16(dtype):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("h,w,c,kk", [(12, 12, 24, 3), (16, 16, 48, 5),
                                       (8, 8, 16, 7), (10, 14, 32, 9)])
 def test_depthwise_conv_sweep(h, w, c, kk):
@@ -166,6 +170,7 @@ def test_depthwise_channel_independence():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("t,chunk", [(32, 8), (32, 16), (64, 64), (48, 16)])
 def test_wkv_chunk_sweep(t, chunk):
     ks = jax.random.split(KEY, 5)

@@ -191,6 +191,7 @@ def test_edgenext_param_count_matches_published():
     assert abs(n / 1e6 - 5.6) < 0.2, n          # paper: ~5.6M
 
 
+@pytest.mark.slow
 def test_edgenext_forward_and_chunked_ibn():
     cfg = reduced_edgenext()
     params = P.init_params(KEY, edgenext.param_defs(cfg))

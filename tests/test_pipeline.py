@@ -8,7 +8,10 @@ import pytest
 
 from repro.runtime.pipeline import bubble_fraction
 
+# JAX_PLATFORMS=cpu: the image ships libtpu; without the override the
+# child process burns 60+s probing a TPU backend that does not exist.
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "JAX_PLATFORMS": "cpu",
        "XLA_FLAGS": "--xla_force_host_platform_device_count=4"}
 
 

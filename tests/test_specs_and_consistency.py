@@ -55,6 +55,7 @@ def test_total_cell_count_matches_design():
                              "rwkv6-1.6b"]
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_recurrentgemma():
     """RG: associative-scan prefill == stepwise decode (state handoff)."""
     cfg = reduced(get_config("recurrentgemma-2b"))
@@ -83,6 +84,7 @@ def test_decode_matches_forward_recurrentgemma():
                                    rtol=3e-3, atol=3e-3)
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_seamless():
     """Enc-dec: teacher-forced decoder == stepwise decode vs the same
     encoder memory."""

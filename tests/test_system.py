@@ -79,6 +79,7 @@ def test_loss_decreases_on_synthetic_language():
         losses[:5], losses[-10:])
 
 
+@pytest.mark.slow
 def test_train_cli_end_to_end(tmp_path):
     """The actual launcher binary: train, then resume."""
     cmd = [sys.executable, "-m", "repro.launch.train", "--arch", "olmo-1b",
@@ -99,6 +100,7 @@ def test_train_cli_end_to_end(tmp_path):
     assert latest_step(tmp_path) == 12
 
 
+@pytest.mark.slow
 def test_serve_cli_end_to_end():
     cmd = [sys.executable, "-m", "repro.launch.serve", "--arch",
            "qwen2-vl-2b", "--reduced", "--batch", "2", "--prompt-len",
