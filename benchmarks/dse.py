@@ -11,7 +11,8 @@ from typing import List, Tuple
 from repro.configs.edgenext_s import CONFIG
 from repro.core.costmodel import HWSpec
 from repro.core.schedule import evaluate_stack
-from repro.core.workload import (edgenext_workload, efficientvit_workload,
+from repro.core.workload import (edgenext_serving_workload,
+                                 edgenext_workload, efficientvit_workload,
                                  vit_workload)
 from repro.search import (auto_schedule, dse, edp_best, hw_variants,
                           pareto_front, sweep)
@@ -41,6 +42,34 @@ def bench_search() -> List[Row]:
                  f"fused_nonlinear={len(sched.fused_nonlinear)}"))
     rows.append(("search.auto.fusion_groups", len(sched.groups),
                  f"lowered_kernels={len(sched.lowered)}"))
+
+    # divisor/imperfect-factor tiling vs the pow2-only ablation, under
+    # identical tile-aware (ragged-edge) accounting — the PR-2
+    # acceptance numbers (<1 = the full enumeration wins)
+    pow2 = auto_schedule(wl, hw, workload="edgenext-s", tile_mode="pow2")
+    rows.append(("search.tiling.edp_tiled_vs_pow2",
+                 sched.cost["edp_tiled"] / pow2.cost["edp_tiled"],
+                 "<1: divisor/imperfect tiles beat pow2-only"))
+    legacy = auto_schedule(wl, hw, workload="edgenext-s",
+                           tile_mode="legacy")
+    rows.append(("search.tiling.edp_tiled_vs_legacy",
+                 sched.cost["edp_tiled"] / legacy.cost["edp_tiled"],
+                 "<=1: vs the PR-1 pow2+pivots space"))
+    rows.append(("search.tiling.sram_tiled_saved_kb",
+                 (pow2.cost["sram_tiled_bytes"]
+                  - sched.cost["sram_tiled_bytes"]) / 1024,
+                 "group SRAM traffic saved vs pow2-only"))
+    ragged = sum(1 for t in sched.tiles.values()
+                 if t.get("ragged_x") or t.get("ragged_c"))
+    rows.append(("search.tiling.ragged_groups", ragged,
+                 f"of {len(sched.tiles)} tiled groups"))
+
+    # batch>1 serving shape (odd channel dims x batched pixel extents)
+    wl_b4 = edgenext_serving_workload(batch=4)
+    sched_b4 = auto_schedule(wl_b4, hw, workload="edgenext-s-b4")
+    rows.append(("search.auto.b4.latency_ms",
+                 sched_b4.cost["latency_s"] * 1e3,
+                 f"edp_tiled={sched_b4.cost['edp_tiled']:.4g}"))
 
     for name, wlx in (("vit_tiny", vit_workload()),
                       ("efficientvit_b0", efficientvit_workload())):

@@ -157,7 +157,8 @@ class NetworkCost:
 
 def _mac_layer_cost(layer: Layer, hw: HWSpec, mapping,
                     extra_dram: int = 0, *,
-                    fixed_wiring: bool = False) -> LayerCost:
+                    fixed_wiring: bool = False,
+                    sram_override: Optional[int] = None) -> LayerCost:
     if isinstance(mapping, str):
         cyc = dataflow.cycles(layer, mapping, hw.rows, hw.cols)
     else:
@@ -166,7 +167,10 @@ def _mac_layer_cost(layer: Layer, hw: HWSpec, mapping,
         mapping = "|".join(mapping).upper()        # display form
     # SRAM traffic: inputs read once (output-stationary RF holds partials
     # across the C-temporal loop), outputs written once, weights streamed.
-    sram = layer.input_bytes + layer.output_bytes + layer.weight_bytes
+    # A depth-first fusion group replaces this flat estimate with the
+    # tiler's ragged-aware accounting via ``sram_override``.
+    sram = layer.input_bytes + layer.output_bytes + layer.weight_bytes \
+        if sram_override is None else sram_override
     # RF traffic: one 32b partial accumulate per MAC cycle per active PE,
     # amortized as 4B per `cols` MACs (adder-tree writes one value/col).
     rf = 4 * (layer.macs // max(hw.cols, 1) + layer.output_elems)
@@ -245,6 +249,34 @@ def cost_network(
     return NetworkCost(layers=out, hw=hw)
 
 
+def group_sram_overrides(layers: List[Layer], groups, tiles
+                         ) -> Dict[str, int]:
+    """Per-MAC-layer SRAM byte overrides for depth-first fusion groups.
+
+    ``groups`` is a sequence of layer-name tuples (one per fusion group),
+    ``tiles`` maps the group's head MAC name to the tiler's summary dict.
+    For a multi-MAC group the tiler already accounted the whole group's
+    SRAM movement — input re-reads per channel round, weight re-streams
+    per x slab (ragged rounds charged their true cost), one output write —
+    so the head layer carries ``sram_traffic`` and the other member MACs
+    carry zero (their tensors live in the local buffer, not SRAM).
+    """
+    by_name = {l.name: l for l in layers}
+    out: Dict[str, int] = {}
+    for g in groups:
+        macs = [n for n in g
+                if n in by_name and by_name[n].op in MAC_OPS]
+        if len(macs) < 2:
+            continue
+        tile = tiles.get(macs[0])
+        if not tile or "sram_traffic" not in tile:
+            continue
+        out[macs[0]] = int(tile["sram_traffic"])
+        for n in macs[1:]:
+            out[n] = 0
+    return out
+
+
 def cost_network_scheduled(
     layers: List[Layer],
     hw: Optional[HWSpec] = None,
@@ -253,6 +285,7 @@ def cost_network_scheduled(
     fused_nonlinear: "set[str]",
     edges: List[object],
     fixed_wiring: bool = False,
+    sram_overrides: Optional[Dict[str, int]] = None,
 ) -> NetworkCost:
     """Cost the network under an explicit schedule (the ``repro.search``
     auto-scheduler's output) instead of the boolean config flags.
@@ -268,10 +301,16 @@ def cost_network_scheduled(
       fixed_wiring    : the array's columns are a hard-wired adder tree
                         (non-reconfigurable baseline) — generic mappings
                         are costed with the column-void penalty
+      sram_overrides  : per-MAC-layer SRAM byte replacements (see
+                        ``group_sram_overrides``) — the tile-aware,
+                        ragged-edge accounting of depth-first groups.
+                        Omitted: the flat read-once/write-once estimate,
+                        which is what the hand-coded Fig 8 stack uses.
     """
     hw = hw or HWSpec()
     from repro.core.fusion import spill_bytes_per_layer
     spills = spill_bytes_per_layer(layers, edges)
+    sram_overrides = sram_overrides or {}
     out: List[LayerCost] = []
     for l in layers:
         if l.op in MAC_OPS:
@@ -280,7 +319,9 @@ def cost_network_scheduled(
                 mapping = dataflow.select_mapping(l, reconfigurable=False)
             out.append(_mac_layer_cost(l, hw, mapping,
                                        extra_dram=spills.get(l.name, 0),
-                                       fixed_wiring=fixed_wiring))
+                                       fixed_wiring=fixed_wiring,
+                                       sram_override=sram_overrides.get(
+                                           l.name)))
         else:
             out.append(_nonlinear_layer_cost(
                 l, hw, l.name in fused_nonlinear,

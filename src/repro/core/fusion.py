@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.tiling import Tiling, budget_tile_candidates
 from repro.core.workload import MAC_OPS, Layer, ibn_groups
 
 
@@ -108,34 +109,49 @@ class FusedTile:
     tile_x: int          # pixels per tile
     tile_c: int          # expanded channels per tile
     buffer_bytes: int    # live T tile
-    weight_rereads: int  # times W1/W2 are re-read from SRAM (per x-tile)
+    weight_rereads: int  # times W1/W2 are re-read from SRAM (x rounds,
+    #                      ragged round included)
     sram_traffic: int    # total SRAM bytes moved for the fused pair
+    ragged_x: int = 0    # size of the ragged last x tile (0 = perfect)
+    ragged_c: int = 0    # size of the ragged last c tile (0 = perfect)
 
 
 def optimize_tile(expand: Layer, project: Layer, *, local_buffer: int,
-                  candidates_x: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64,
-                                                   128, 256),
-                  full_width: bool = False) -> FusedTile:
+                  candidates_x: Optional[Tuple[int, ...]] = None,
+                  full_width: bool = False,
+                  mode: str = "full") -> FusedTile:
     """Pick (tile_x, tile_c) minimizing SRAM traffic subject to the tile of
     T fitting in the local buffer (paper: 'tile sizes optimized by ZigZag').
 
+    ``candidates_x`` defaults to the full divisor + imperfect-factor
+    enumeration of ``core.tiling`` (all divisors of the pixel extent,
+    powers of two, and the two budget pivots); ``mode="pow2"`` restricts
+    it to the power-of-two ablation baseline.  Imperfect tile sizes are
+    first-class: a tile_x that does not divide the pixel extent covers it
+    with a ragged last slab, charged its true (smaller) traffic but the
+    full per-round weight re-stream.
+
     ``full_width=True`` additionally requires the whole channel extent of
     T resident per x-slab (needed when a channel-stat nonlinear sits
-    between the fused layers).  ``repro.search.tiler`` supplies
-    budget-driven ``candidates_x`` in place of this default fixed list.
+    between the fused layers).
 
     Traffic model for one IBN:
-      x       : re-read once per c-tile round (streams past the array)
+      x       : re-read in full once per c-tile round (a ragged c round
+                still streams the whole input past the array)
       T       : never leaves the local buffer (that is the fusion)
-      W1, W2  : re-read once per x tile
-      out     : accumulated in the RF, written once
+      W1, W2  : re-read once per x round, ragged round included
+      out     : accumulated in the RF, written once (exact volume)
     """
     n = expand.ox * expand.oy * expand.b        # pixels
     c_in = expand.c
     c_mid = expand.k                            # expanded width
     c_out = project.k
     bits = expand.bits // 8
+    if candidates_x is None:
+        candidates_x = tuple(budget_tile_candidates(
+            n, c_mid, bits, local_buffer, mode=mode))
 
+    w_bytes = (c_in * c_mid + c_mid * c_out) * bits
     best: Optional[FusedTile] = None
     for tx in candidates_x:
         tx = min(tx, n)
@@ -144,14 +160,18 @@ def optimize_tile(expand: Layer, project: Layer, *, local_buffer: int,
             continue        # tile of T cannot fit the local buffer
         if full_width and tc < c_mid:
             continue        # stats need the whole channel extent resident
-        n_xt = -(-n // tx)
-        n_ct = -(-c_mid // tc)
-        x_reads = n * c_in * bits * n_ct
-        w_reads = (c_in * c_mid + c_mid * c_out) * bits * n_xt
+        tiling_x = Tiling(n, tx)
+        tiling_c = Tiling(c_mid, tc)
+        # x streams fully once per c round; W1/W2 stream fully once per
+        # x round; the output's exact volume is written once.
+        x_reads = tiling_c.traffic(per_elem=0, per_round=n * c_in * bits)
+        w_reads = tiling_x.traffic(per_elem=0, per_round=w_bytes)
         out_writes = n * c_out * bits
         traffic = x_reads + w_reads + out_writes
         cand = FusedTile(tile_x=tx, tile_c=tc, buffer_bytes=tx * tc * bits,
-                         weight_rereads=n_xt, sram_traffic=traffic)
+                         weight_rereads=tiling_x.rounds,
+                         sram_traffic=traffic,
+                         ragged_x=tiling_x.ragged, ragged_c=tiling_c.ragged)
         if best is None or cand.sram_traffic < best.sram_traffic:
             best = cand
     if best is None:

@@ -177,6 +177,22 @@ def edgenext_workload(cfg: EdgeNeXtConfig, batch: int = 1) -> List[Layer]:
     return layers
 
 
+def edgenext_serving_workload(batch: int = 4,
+                              cfg: Optional[EdgeNeXtConfig] = None
+                              ) -> List[Layer]:
+    """EdgeNeXt-S at a batch>1 serving shape.
+
+    Batching multiplies every pixel extent (``b * ox * oy``) by
+    ``batch`` while the channel extents keep the odd stage dims
+    (48/96/160/304) — the regime where power-of-two tiles go ragged and
+    the divisor/imperfect-factor tiler has to charge the ragged slabs
+    their true cost.  Used by the DSE as the serving-throughput design
+    point next to the paper's batch-1 latency point.
+    """
+    from repro.configs.edgenext_s import CONFIG
+    return edgenext_workload(cfg or CONFIG, batch=batch)
+
+
 # ---------------------------------------------------------------------------
 # Additional workloads (auto-scheduler generalization targets)
 # ---------------------------------------------------------------------------

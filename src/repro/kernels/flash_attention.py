@@ -15,6 +15,13 @@ BlockSpecs:
   q   : (1, bq, D)  at (h, i, 0)
   k,v : (1, bk, D)  at (h, 0, j)
   out : (1, bq, D)  at (h, i, 0)
+
+Ragged edges: block sizes need not divide the true sequence lengths.
+The ``ops`` wrapper pads Q/K/V to block multiples and passes the true
+KV length via ``kv_len``; the kernel folds ``k_pos < kv_len`` into the
+score mask (in-kernel edge predication) so padded keys get -inf scores
+and contribute nothing to the online softmax.  Padded query rows are
+row-independent and sliced off by the caller.
 """
 from __future__ import annotations
 
@@ -31,7 +38,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   scale: float, causal: bool, window: Optional[int],
-                  bq: int, bk: int, n_k: int):
+                  bq: int, bk: int, n_k: int, kv_len: int):
     j = pl.program_id(2)
 
     @pl.when(j == 0)
@@ -52,6 +59,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         mask &= q_pos >= k_pos
     if window is not None:
         mask &= (q_pos - k_pos) < window
+    if kv_len % bk:         # ragged final KV block: padded keys get -inf
+        mask &= k_pos < kv_len
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[...]
@@ -73,13 +82,18 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
                                              "block_q", "block_k",
-                                             "interpret"))
+                                             "interpret", "kv_len"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     scale: Optional[float] = None, block_q: int = 512,
-                    block_k: int = 512,
-                    interpret: bool = False) -> jax.Array:
-    """q,k,v: [B, H, S, D] (H = full query heads) -> [B, H, Sq, D]."""
+                    block_k: int = 512, interpret: bool = False,
+                    kv_len: Optional[int] = None) -> jax.Array:
+    """q,k,v: [B, H, S, D] (H = full query heads) -> [B, H, Sq, D].
+
+    Sq must divide by block_q and Sk by block_k — ``ops.flash_attention``
+    pads ragged sequences and passes the true KV length via ``kv_len``
+    so padded keys are masked out of the softmax.
+    """
     B, H, Sq, D = q.shape
     Sk = k.shape[2]
     scale_ = scale if scale is not None else D ** -0.5
@@ -87,6 +101,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     bk = min(block_k, Sk)
     assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
     n_q, n_k = Sq // bq, Sk // bk
+    kv = Sk if kv_len is None else kv_len
+    assert Sk - bk < kv <= Sk, (Sk, bk, kv)
 
     qf = q.reshape(B * H, Sq, D)
     kf = k.reshape(B * H, Sk, D)
@@ -94,7 +110,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     out = pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale_, causal=causal,
-                          window=window, bq=bq, bk=bk, n_k=n_k),
+                          window=window, bq=bq, bk=bk, n_k=n_k,
+                          kv_len=kv),
         grid=(B * H, n_q, n_k),
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda h, i, j: (h, i, 0)),

@@ -17,6 +17,13 @@ BlockSpecs (VMEM tiles):
   wg  : (D, bf)   at (0, j)      — gate weights (gated variants)
   w2  : (bf, D)   at (j, 0)      — project weights, one f-tile
   out : (bm, D)   at (i, 0)      — accumulator (f32 scratch, cast on exit)
+
+Ragged edges: block sizes need not divide the true extents.  The ``ops``
+wrapper pads operands to block multiples; ``valid_f`` carries the true
+d_ff extent and the kernel zero-masks the padded columns of T before the
+contraction (in-kernel edge predication), so the padded final block
+contributes nothing regardless of pad contents or activation.  Padded
+rows (M axis) are row-independent and simply sliced off by the caller.
 """
 from __future__ import annotations
 
@@ -40,8 +47,17 @@ def _act(name: str, x: jax.Array) -> jax.Array:
     raise ValueError(name)
 
 
+def _mask_ragged_f(t: jax.Array, j, bf: int, valid_f: int) -> jax.Array:
+    """Zero T columns past the true d_ff extent (static no-op when the
+    f blocks tile perfectly)."""
+    if valid_f % bf == 0:
+        return t
+    f_idx = j * bf + jax.lax.broadcasted_iota(jnp.int32, t.shape, 1)
+    return jnp.where(f_idx < valid_f, t, 0.0)
+
+
 def _ibn_kernel(x_ref, w1_ref, w2_ref, o_ref, acc_ref, *, activation: str,
-                n_f: int):
+                n_f: int, bf: int, valid_f: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -51,7 +67,7 @@ def _ibn_kernel(x_ref, w1_ref, w2_ref, o_ref, acc_ref, *, activation: str,
     x = x_ref[...]
     # T tile: produced in VMEM, consumed immediately, never written to HBM
     t = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
-    t = _act(activation, t)
+    t = _mask_ragged_f(_act(activation, t), j, bf, valid_f)
     acc_ref[...] += jnp.dot(t.astype(x.dtype), w2_ref[...],
                             preferred_element_type=jnp.float32)
 
@@ -61,7 +77,7 @@ def _ibn_kernel(x_ref, w1_ref, w2_ref, o_ref, acc_ref, *, activation: str,
 
 
 def _ibn_gated_kernel(x_ref, w1_ref, wg_ref, w2_ref, o_ref, acc_ref, *,
-                      activation: str, n_f: int):
+                      activation: str, n_f: int, bf: int, valid_f: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -71,7 +87,7 @@ def _ibn_gated_kernel(x_ref, w1_ref, wg_ref, w2_ref, o_ref, acc_ref, *,
     x = x_ref[...]
     up = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
     gate = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
-    t = _act(activation, gate) * up
+    t = _mask_ragged_f(_act(activation, gate) * up, j, bf, valid_f)
     acc_ref[...] += jnp.dot(t.astype(x.dtype), w2_ref[...],
                             preferred_element_type=jnp.float32)
 
@@ -81,14 +97,18 @@ def _ibn_gated_kernel(x_ref, w1_ref, wg_ref, w2_ref, o_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("activation", "block_m",
-                                             "block_f", "interpret"))
+                                             "block_f", "interpret",
+                                             "valid_f"))
 def fused_ibn(x: jax.Array, w1: jax.Array, w2: jax.Array,
               wg: Optional[jax.Array] = None, *, activation: str = "gelu",
               block_m: int = 256, block_f: int = 512,
-              interpret: bool = False) -> jax.Array:
+              interpret: bool = False,
+              valid_f: Optional[int] = None) -> jax.Array:
     """x: [M, D]; w1/wg: [D, F]; w2: [F, D] -> [M, D].
 
-    M must divide by block_m and F by block_f (ops.fused_ibn_auto pads).
+    M must divide by block_m and F by block_f — ``ops.fused_ibn`` pads
+    ragged operands to block multiples and passes the true d_ff extent
+    via ``valid_f`` so the kernel masks the padded columns of T.
     """
     M, D = x.shape
     F = w1.shape[1]
@@ -97,6 +117,8 @@ def fused_ibn(x: jax.Array, w1: jax.Array, w2: jax.Array,
     bf = min(block_f, F)
     assert M % bm == 0 and F % bf == 0, (M, F, bm, bf)
     n_m, n_f = M // bm, F // bf
+    vf = F if valid_f is None else valid_f
+    assert F - bf < vf <= F, (F, bf, vf)
 
     grid = (n_m, n_f)
     x_spec = pl.BlockSpec((bm, D), lambda i, j: (i, 0))
@@ -106,12 +128,12 @@ def fused_ibn(x: jax.Array, w1: jax.Array, w2: jax.Array,
 
     if wg is None:
         kernel = functools.partial(_ibn_kernel, activation=activation,
-                                   n_f=n_f)
+                                   n_f=n_f, bf=bf, valid_f=vf)
         in_specs = [x_spec, w1_spec, w2_spec]
         args = (x, w1, w2)
     else:
         kernel = functools.partial(_ibn_gated_kernel, activation=activation,
-                                   n_f=n_f)
+                                   n_f=n_f, bf=bf, valid_f=vf)
         in_specs = [x_spec, w1_spec, w1_spec, w2_spec]
         args = (x, w1, wg, w2)
 

@@ -16,10 +16,18 @@ BlockSpecs:
   b   : (N,)      at (0,)      — bias (broadcast over rows)
   g,o : (N,)      at (0,)      — LN scale / offset
   out : (bm, N)   at (i, 0)
+
+Ragged edges: block_k need not divide the true reduction extent.  The
+``ops`` wrapper pads x / w to block multiples and passes the true K via
+``valid_k``; the kernel zero-masks the padded reduction columns of the
+x block (in-kernel edge predication) so the ragged final k block adds
+nothing to the accumulator — and hence nothing to the LN statistics.
+Padded M rows are row-independent and sliced off by the caller.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,14 +36,19 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _matmul_ln_kernel(x_ref, w_ref, b_ref, g_ref, o_ref, out_ref, acc_ref,
-                      *, n_k: int, eps: float):
+                      *, n_k: int, bk: int, valid_k: int, eps: float):
     k = pl.program_id(1)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+    x = x_ref[...]
+    if valid_k % bk:        # ragged final reduction block: zero-mask the
+        #                     padded columns (static no-op when perfect)
+        k_idx = k * bk + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        x = jnp.where(k_idx < valid_k, x, 0)
+    acc_ref[...] += jnp.dot(x, w_ref[...],
                             preferred_element_type=jnp.float32)
 
     @pl.when(k == n_k - 1)
@@ -52,20 +65,30 @@ def _matmul_ln_kernel(x_ref, w_ref, b_ref, g_ref, o_ref, out_ref, acc_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_k",
-                                             "interpret", "eps"))
+                                             "interpret", "eps",
+                                             "valid_k"))
 def matmul_ln(x: jax.Array, w: jax.Array, b: jax.Array, gamma: jax.Array,
               beta: jax.Array, *, block_m: int = 256, block_k: int = 512,
-              eps: float = 1e-6, interpret: bool = False) -> jax.Array:
-    """x: [M, K]; w: [K, N]; b/gamma/beta: [N] -> LN(x @ w + b) [M, N]."""
+              eps: float = 1e-6, interpret: bool = False,
+              valid_k: Optional[int] = None) -> jax.Array:
+    """x: [M, K]; w: [K, N]; b/gamma/beta: [N] -> LN(x @ w + b) [M, N].
+
+    M must divide by block_m and K by block_k — ``ops.matmul_ln`` pads
+    ragged operands and passes the true reduction extent via
+    ``valid_k`` so the kernel masks the padded columns.
+    """
     M, K = x.shape
     N = w.shape[1]
     bm = min(block_m, M)
     bk = min(block_k, K)
     assert M % bm == 0 and K % bk == 0, (M, K, bm, bk)
     n_m, n_k = M // bm, K // bk
+    vk = K if valid_k is None else valid_k
+    assert K - bk < vk <= K, (K, bk, vk)
 
     return pl.pallas_call(
-        functools.partial(_matmul_ln_kernel, n_k=n_k, eps=eps),
+        functools.partial(_matmul_ln_kernel, n_k=n_k, bk=bk, valid_k=vk,
+                          eps=eps),
         grid=(n_m, n_k),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, k: (i, k)),

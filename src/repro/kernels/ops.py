@@ -4,6 +4,13 @@ Each wrapper pads inputs to kernel tile multiples, dispatches
 ``interpret=True`` automatically on non-TPU backends (the kernels are
 written for TPU BlockSpec tiling; interpret mode executes the kernel body
 in Python for correctness validation on CPU), and unpads the result.
+
+Ragged extents are first-class: a block size that does not divide the
+extent is honored, not shrunk — the wrapper pads the operand to the next
+block multiple and forwards the true extent (``valid_f`` / ``valid_k`` /
+``kv_len``) so the kernel's in-kernel edge predication masks the padded
+final block.  This is what lets ``search.lower`` emit the searched tile
+sizes unchanged on EdgeNeXt's odd channel/pixel extents.
 """
 from __future__ import annotations
 
@@ -41,14 +48,16 @@ def fused_ibn(x: jax.Array, w1: jax.Array, w2: jax.Array,
     D = x.shape[-1]
     xf = x.reshape(-1, D)
     M = xf.shape[0]
+    F = w1.shape[1]
     bm = min(block_m, M)
     xp = _pad_to(xf, 0, bm)
-    bf = min(block_f, w1.shape[1])
+    bf = min(block_f, F)
     w1p = _pad_to(w1, 1, bf)
     w2p = _pad_to(w2, 0, bf)
     wgp = _pad_to(wg, 1, bf) if wg is not None else None
     out = _ibn.fused_ibn(xp, w1p, w2p, wgp, activation=activation,
-                         block_m=bm, block_f=bf, interpret=interp)
+                         block_m=bm, block_f=bf, interpret=interp,
+                         valid_f=F)
     return out[:M].reshape(*lead, w2.shape[1])
 
 
@@ -64,9 +73,10 @@ def matmul_ln(x: jax.Array, w: jax.Array, b: jax.Array, gamma: jax.Array,
     bm = min(block_m, M)
     xp = _pad_to(xf, 0, bm)
     bk = min(block_k, K)
-    assert K % bk == 0, (K, bk)
-    out = _mln.matmul_ln(xp, w, b, gamma, beta, block_m=bm, block_k=bk,
-                         eps=eps, interpret=interp)
+    xp = _pad_to(xp, 1, bk)
+    wp = _pad_to(w, 0, bk)
+    out = _mln.matmul_ln(xp, wp, b, gamma, beta, block_m=bm, block_k=bk,
+                         eps=eps, interpret=interp, valid_k=K)
     return out[:M].reshape(*lead, w.shape[1])
 
 
@@ -79,13 +89,13 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     Sq, Sk = q.shape[2], k.shape[2]
     bq = min(block_q, Sq)
     bk = min(block_k, Sk)
-    while Sq % bq:
-        bq //= 2
-    while Sk % bk:
-        bk //= 2
-    return _fa.flash_attention(q, k, v, causal=causal, window=window,
-                               scale=scale, block_q=bq, block_k=bk,
-                               interpret=interp)
+    qp = _pad_to(q, 2, bq)
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    out = _fa.flash_attention(qp, kp, vp, causal=causal, window=window,
+                              scale=scale, block_q=bq, block_k=bk,
+                              interpret=interp, kv_len=Sk)
+    return out[:, :, :Sq]
 
 
 def depthwise_conv2d(x: jax.Array, w: jax.Array, b: jax.Array, *,

@@ -31,10 +31,12 @@ __all__ = [
 def get_workload(name: str):
     """Named workload registry for the CLI / benchmarks."""
     from repro.configs.edgenext_s import CONFIG, reduced_edgenext
-    from repro.core.workload import (edgenext_workload,
+    from repro.core.workload import (edgenext_serving_workload,
+                                     edgenext_workload,
                                      efficientvit_workload, vit_workload)
     builders = {
         "edgenext-s": lambda: edgenext_workload(CONFIG),
+        "edgenext-s-b4": lambda: edgenext_serving_workload(batch=4),
         "edgenext-reduced": lambda: edgenext_workload(reduced_edgenext()),
         "vit-tiny": lambda: vit_workload(),
         "efficientvit-b0": lambda: efficientvit_workload(),
@@ -45,5 +47,5 @@ def get_workload(name: str):
     return builders[name]()
 
 
-WORKLOADS = ("edgenext-s", "edgenext-reduced", "vit-tiny",
+WORKLOADS = ("edgenext-s", "edgenext-s-b4", "edgenext-reduced", "vit-tiny",
              "efficientvit-b0")

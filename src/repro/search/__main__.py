@@ -44,6 +44,11 @@ def main(argv=None) -> int:
                     help="content-addressed schedule cache directory")
     ap.add_argument("--dse", action="store_true",
                     help="sweep HWSpec variants and print the Pareto front")
+    ap.add_argument("--golden", type=Path, default=None,
+                    help="write the small golden-schedule snapshot "
+                         "(groups + tiles + EDP) asserted by "
+                         "tests/test_search.py — regenerate after "
+                         "intentional cost-model changes")
     ap.add_argument("--rows", type=int, default=None)
     ap.add_argument("--cols", type=int, default=None)
     ap.add_argument("--sram-kb", type=int, default=None)
@@ -95,6 +100,17 @@ def main(argv=None) -> int:
     if args.out:
         save_schedule(sched, args.out)
         print(f"# wrote {args.out}")
+    if args.golden:
+        args.golden.parent.mkdir(parents=True, exist_ok=True)
+        args.golden.write_text(json.dumps({
+            "version": sched.version,
+            "workload": sched.workload,
+            "groups": [list(g) for g in sched.groups],
+            "tiles": sched.tiles,
+            "cost": {"edp": sched.cost["edp"],
+                     "edp_tiled": sched.cost["edp_tiled"]},
+        }, indent=1, sort_keys=True))
+        print(f"# wrote golden snapshot {args.golden}")
     return 0
 
 

@@ -21,7 +21,8 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.costmodel import (HWSpec, NetworkCost,
-                                  cost_network_scheduled)
+                                  cost_network_scheduled,
+                                  group_sram_overrides)
 from repro.core.workload import MAC_OPS, NORM, SOFTMAX, Layer
 from repro.search import cache as cache_mod
 from repro.search import lower as lower_mod
@@ -46,6 +47,10 @@ class Schedule:
     # columns hard-wired as an adder tree (non-reconfigurable array):
     # the mappings must be costed with the column-void penalty
     fixed_wiring: bool = False
+    # the tile-candidate space this schedule was searched in ("full" |
+    # "legacy" | "pow2") — part of the content hash so ablation
+    # schedules are never replayed as full-enumeration results
+    tile_mode: str = "full"
 
     def spill_edge_list(self):
         from repro.core.fusion import SpillEdge
@@ -54,24 +59,40 @@ class Schedule:
 
 
 def evaluate_schedule(layers: List[Layer], schedule: Schedule,
-                      hw: Optional[HWSpec] = None) -> NetworkCost:
-    """Cost a Schedule with the shared zigzag-lite accounting."""
+                      hw: Optional[HWSpec] = None, *,
+                      tile_aware: bool = False) -> NetworkCost:
+    """Cost a Schedule with the shared zigzag-lite accounting.
+
+    ``tile_aware=True`` swaps the flat per-layer SRAM estimate of each
+    multi-MAC fusion group for the tiler's ragged-edge accounting
+    (input re-reads per channel round, weight re-streams per x slab) —
+    the metric under which tile-candidate spaces are compared.  The
+    default keeps the seed accounting so searched and hand-coded
+    schedules stay directly comparable.
+    """
     hw = hw or HWSpec()
+    overrides = group_sram_overrides(layers, schedule.groups,
+                                     schedule.tiles) if tile_aware else None
     return cost_network_scheduled(
         layers, hw,
         mappings={k: tuple(v) for k, v in schedule.mappings.items()},
         fused_nonlinear=set(schedule.fused_nonlinear),
         edges=schedule.spill_edge_list(),
-        fixed_wiring=schedule.fixed_wiring)
+        fixed_wiring=schedule.fixed_wiring,
+        sram_overrides=overrides)
 
 
 def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                   workload: str = "custom",
-                  reconfigurable: bool = True) -> Schedule:
+                  reconfigurable: bool = True,
+                  tile_mode: str = "full") -> Schedule:
     """Search mappings, loop orders, fusion groups, and tiles for one
     workload on one HWSpec.  ``reconfigurable=False`` restricts the
     whole network to a single fixed-wiring mapping (the paper's baseline
-    array) — the search then optimizes only what that array allows."""
+    array) — the search then optimizes only what that array allows.
+    ``tile_mode`` selects the tile-candidate space: "full" (divisors +
+    imperfect factors, the default) or "pow2" (the ablation baseline the
+    ragged-aware search is measured against)."""
     hw = hw or HWSpec()
 
     # 1. spatial mappings
@@ -93,7 +114,8 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
             cycles_by_name[l.name] = mc.cycles
 
     # 2. fusion partition (DP)
-    part = partition.partition_chain(layers, cycles_by_name, hw)
+    part = partition.partition_chain(layers, cycles_by_name, hw,
+                                     tile_mode=tile_mode)
 
     # 3. tiles + group summaries
     tiles: Dict[str, Dict[str, int]] = {}
@@ -107,7 +129,9 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                 "tile_x": g.tile.tile_x, "tile_c": g.tile.tile_c,
                 "buffer_bytes": g.tile.buffer_bytes,
                 "weight_rereads": g.tile.weight_rereads,
-                "sram_traffic": g.tile.sram_traffic}
+                "sram_traffic": g.tile.sram_traffic,
+                "ragged_x": g.tile.ragged_x,
+                "ragged_c": g.tile.ragged_c}
 
     # 4. temporal orders (pixelwise-constrained where a channel-stat
     #    nonlinear fused into this layer's writeback)
@@ -128,22 +152,24 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
             if l.op not in MAC_OPS:
                 continue
             t = mapper.best_temporal(
-                l, hw, require_pixelwise=needs_pixelwise.get(l.name, False))
+                l, hw, require_pixelwise=needs_pixelwise.get(l.name, False),
+                tile_mode=tile_mode)
             if t is None:
-                t = mapper.best_temporal(l, hw)
+                t = mapper.best_temporal(l, hw, tile_mode=tile_mode)
             if t is not None:
                 orders[l.name] = t.order
 
     # 5. Pallas launch parameters
     lowered = {
-        " + ".join(lk.layer_names): {"kernel": lk.kernel, **lk.params}
+        " + ".join(lk.layer_names): {"kernel": lk.kernel, **lk.params,
+                                     "ragged": dict(lk.ragged)}
         for lk in lower_mod.lower_schedule(
             list(layers), part.groups, tiles,
             local_buffer=hw.output_rf_bytes)}
 
     sched = Schedule(
         version=cache_mod.SEARCH_VERSION, workload=workload,
-        key=cache_mod.schedule_key(layers, hw),
+        key=cache_mod.schedule_key(layers, hw, tile_mode),
         hw={f.name: getattr(hw, f.name)
             for f in dataclasses.fields(hw)},
         mappings=mappings, orders=orders,
@@ -152,11 +178,17 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
         edges=tuple((e.producer, e.consumer, e.nbytes)
                     for e in part.edges),
         tiles=tiles, lowered=lowered, cost={},
-        fixed_wiring=not reconfigurable)
+        fixed_wiring=not reconfigurable, tile_mode=tile_mode)
 
-    # 6. headline numbers under the shared accounting
+    # 6. headline numbers under the shared accounting, plus the
+    #    tile-aware (ragged-edge) variant used to compare candidate
+    #    spaces under identical accounting
     nc = evaluate_schedule(layers, sched, hw)
+    nct = evaluate_schedule(layers, sched, hw, tile_aware=True)
     sched.cost = {"latency_s": nc.latency_s, "energy_j": nc.energy_j,
                   "edp": nc.edp, "fps": nc.fps,
-                  "dram_bytes": float(nc.dram_bytes())}
+                  "dram_bytes": float(nc.dram_bytes()),
+                  "energy_tiled_j": nct.energy_j, "edp_tiled": nct.edp,
+                  "sram_tiled_bytes": float(sum(
+                      lc.sram_bytes for lc in nct.layers))}
     return sched

@@ -19,18 +19,23 @@ from repro.core.workload import Layer
 
 # bump when the search space / cost accounting changes so stale cached
 # schedules are never replayed against a newer engine
-SEARCH_VERSION = 1
+# v2: divisor + imperfect-factor tile enumeration, ragged-edge cost
+#     accounting, tiled cost rows, ragged-aware lowering
+SEARCH_VERSION = 2
 
 
 def _canon_layers(layers: List[Layer]) -> List[dict]:
     return [dataclasses.asdict(l) for l in layers]
 
 
-def schedule_key(layers: List[Layer], hw: HWSpec) -> str:
-    """Content hash identifying one search problem."""
+def schedule_key(layers: List[Layer], hw: HWSpec,
+                 tile_mode: str = "full") -> str:
+    """Content hash identifying one search problem.  ``tile_mode`` is a
+    search dimension: a pow2-ablation schedule must never be replayed as
+    a full-enumeration result."""
     blob = json.dumps(
         {"v": SEARCH_VERSION, "hw": dataclasses.asdict(hw),
-         "layers": _canon_layers(layers)},
+         "layers": _canon_layers(layers), "tile_mode": tile_mode},
         sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
@@ -64,7 +69,8 @@ def load_schedule(path: Path) -> Optional["object"]:
             groups=tuple(tuple(g) for g in raw["groups"]),
             edges=tuple(tuple(e) for e in raw["edges"]),
             tiles=raw["tiles"], lowered=raw["lowered"], cost=raw["cost"],
-            fixed_wiring=raw.get("fixed_wiring", False))
+            fixed_wiring=raw.get("fixed_wiring", False),
+            tile_mode=raw.get("tile_mode", "full"))
     except (KeyError, TypeError):
         return None
 

@@ -10,10 +10,14 @@ drives actual launches:
 
 Abstract tile sizes are snapped to TPU-friendly blocks: powers of two,
 multiples of the 8-row sublane where the extent allows, clamped to the
-tensor extents (the ``ops`` wrappers pad ragged remainders).  The
-emitted parameter dicts are directly splattable into the kernel calls —
-``tests/test_search.py`` runs them through the kernel-vs-``ref``
-correctness harness.
+tensor extents.  A block is NOT forced to divide its extent: imperfect
+blocks are first-class — ``_snap`` reports the ragged final block
+explicitly, the ``ops`` wrappers pad the operands to a block multiple,
+and the kernels mask the padded region in-kernel (edge predication), so
+the searched tile drives the launch even on EdgeNeXt's odd extents.
+The emitted parameter dicts are directly splattable into the kernel
+calls — ``tests/test_search.py`` runs them through the
+kernel-vs-``ref`` correctness harness.
 """
 from __future__ import annotations
 
@@ -38,10 +42,22 @@ def _pow2_floor(v: int) -> int:
     return p
 
 
-def _snap(v: int, lo: int, hi: int, extent: int) -> int:
-    """Power-of-two block in [lo, hi] near v, clamped to the extent."""
-    b = _pow2_floor(max(lo, min(v, hi)))
-    return _pow2_floor(max(1, min(b, extent)))
+def _snap(v: int, lo: int, hi: int, extent: int) -> Tuple[int, int]:
+    """Power-of-two block in [lo, hi] near v, clamped to the extent.
+
+    Returns ``(block, n_ragged)``: ``block`` need not divide ``extent``;
+    ``n_ragged = extent % block`` is the size of the ragged final block
+    (0 when the tiling is perfect) so callers can no longer mistake an
+    imperfect block for a dividing one.  A degenerate band (``lo > hi``)
+    collapses to the upper bound — the cap always wins, the result never
+    exceeds ``hi`` (or the extent).
+    """
+    extent = max(1, extent)
+    if lo > hi:
+        lo = hi
+    b = _pow2_floor(max(1, max(lo, min(v, hi))))
+    b = _pow2_floor(max(1, min(b, extent)))
+    return b, extent % b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +65,9 @@ class LoweredKernel:
     kernel: str                    # "fused_ibn" | "matmul_ln" | "flash_attention"
     layer_names: Tuple[str, ...]
     params: Dict[str, int]
+    # per-axis ragged final-block sizes (0 = the block divides the
+    # extent); the ops wrappers pad + the kernels mask these edges
+    ragged: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 def lower_ibn(expand: Layer, project: Layer, *, local_buffer: int,
@@ -63,6 +82,7 @@ def lower_ibn(expand: Layer, project: Layer, *, local_buffer: int,
     only when no tile was recorded.
     """
     F = expand.k
+    n_pix = expand.b * expand.ox * expand.oy
     if tile_x is None or tile_c is None:
         ft = tiler.optimize_tile(expand, project,
                                  local_buffer=local_buffer)
@@ -70,29 +90,29 @@ def lower_ibn(expand: Layer, project: Layer, *, local_buffer: int,
             bm, bf = _SUBLANE, min(128, _pow2_floor(F))
             return LoweredKernel("fused_ibn",
                                  (expand.name, project.name),
-                                 {"block_m": bm, "block_f": bf})
+                                 {"block_m": bm, "block_f": bf},
+                                 {"m": n_pix % bm, "f": F % bf})
         tile_x, tile_c = ft.tile_x, ft.tile_c
-    bm = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M,
-               expand.b * expand.ox * expand.oy)
-    bf = _snap(tile_c, _SUBLANE, _MAX_BLOCK_F, F)
+    bm, rm = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M, n_pix)
+    bf, rf = _snap(tile_c, _SUBLANE, _MAX_BLOCK_F, F)
     return LoweredKernel("fused_ibn", (expand.name, project.name),
-                         {"block_m": bm, "block_f": bf})
+                         {"block_m": bm, "block_f": bf},
+                         {"m": rm, "f": rf})
 
 
 def lower_matmul_ln(mac: Layer, norm: Layer, *, tile_x: int,
                     tile_c: int) -> LoweredKernel:
     """MAC layer with a fused trailing LayerNorm -> matmul_ln blocks.
     block_m covers the pixel tile (rows resident for the stats pass);
-    block_k covers the reduction tile."""
+    block_k covers the reduction tile.  block_k need not divide K — the
+    kernel zero-masks the ragged final reduction block in-kernel."""
     n_pix = mac.b * mac.ox * mac.oy
     red = mac.c * mac.fx * mac.fy
-    bm = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M, n_pix)
-    bk = _snap(tile_c, _SUBLANE, _MAX_BLOCK_F, red)
-    # the kernel requires block_k | K; fall back through divisors
-    while red % bk:
-        bk //= 2
+    bm, rm = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M, n_pix)
+    bk, rk = _snap(tile_c, _SUBLANE, _MAX_BLOCK_F, red)
     return LoweredKernel("matmul_ln", (mac.name, norm.name),
-                         {"block_m": bm, "block_k": max(1, bk)})
+                         {"block_m": bm, "block_k": bk},
+                         {"m": rm, "k": rk})
 
 
 def lower_attention(qk: Layer, *, tile_x: int,
@@ -103,10 +123,11 @@ def lower_attention(qk: Layer, *, tile_x: int,
     streaming over it."""
     if seq is None:
         seq = qk.c
-    bq = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M, seq)
-    bk = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M, seq)
+    bq, rq = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M, seq)
+    bk, rk = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M, seq)
     return LoweredKernel("flash_attention", (qk.name,),
-                         {"block_q": bq, "block_k": bk})
+                         {"block_q": bq, "block_k": bk},
+                         {"q": rq, "k": rk})
 
 
 def lower_schedule(layers: Sequence[Layer], groups, tiles: Dict[str, dict],

@@ -25,13 +25,10 @@ from typing import Iterator, List, Optional, Tuple
 
 from repro.core import dataflow
 from repro.core.costmodel import HWSpec
+from repro.core.tiling import Tiling, tile_candidates
 from repro.core.workload import MAC_OPS, Layer
 
 GenericMapping = Tuple[str, str]
-
-
-def _ceil(a: int, b: int) -> int:
-    return -(-a // b)
 
 
 # ---------------------------------------------------------------------------
@@ -117,19 +114,15 @@ def macro_extents(layer: Layer) -> Tuple[int, int, int]:
     return n_x, layer.k, layer.c * layer.fx * layer.fy
 
 
-def _pow2s_upto(n: int) -> List[int]:
-    out, v = [], 1
-    while v < n:
-        out.append(v)
-        v *= 2
-    out.append(n)
-    return out
-
-
 def _traffic(layer: Layer, order: Tuple[str, ...], trips: dict) -> int:
     """SRAM bytes moved under ``order``.  A tensor re-streams once per
     iteration of a loop that does not index it and sits outside one of
-    its loops; the innermost loop reuses whatever is resident."""
+    its loops; the innermost loop reuses whatever is resident.
+
+    Same ragged-edge accounting as ``core.tiling``: each re-stream moves
+    the tensor's exact byte volume (a ragged tile is smaller) while the
+    trip counts are ceil-rounds, so the ragged round pays the full
+    per-round re-stream of the *other* tensors."""
     inner = order[-1]
     w = layer.weight_bytes * (1 if inner == "x" else trips["x"])
     x = layer.input_bytes * (1 if inner == "k" else trips["k"])
@@ -149,22 +142,30 @@ def _pixelwise_ok(order: Tuple[str, ...], trips: dict) -> bool:
     return ki > xi or trips["k"] == 1 or trips["x"] == 1
 
 
-def enumerate_temporal(layer: Layer, hw: HWSpec) -> Iterator[TemporalChoice]:
+def enumerate_temporal(layer: Layer, hw: HWSpec,
+                       tile_mode: str = "full") -> Iterator[TemporalChoice]:
     """Loop orders x budget-driven tile sizes for one MAC layer.
 
     Tiles are bounded by the HW buffers: the output RF holds the
     (tile_x, tile_k) 32-bit psum block; the input memory holds the
-    (tile_x, tile_c) operand block.
+    (tile_x, tile_c) operand block.  tile_x candidates come from the
+    shared divisor + imperfect-factor enumeration (``core.tiling``);
+    the pivots are the largest x-tiles keeping the full K extent in the
+    RF and the full reduction extent in the input memory.  Trip counts
+    are ragged-aware ceil-rounds over the same ``Tiling`` model the
+    group tiler charges.
     """
     n_x, n_k, n_c = macro_extents(layer)
     bytes_per = max(1, layer.bits // 8)
-    for tx in _pow2s_upto(n_x):
+    pivots = (hw.output_rf_bytes // (4 * n_k),
+              hw.input_mem_bytes // (bytes_per * n_c))
+    for tx in tile_candidates(n_x, extra=pivots, mode=tile_mode):
         tk = min(n_k, hw.output_rf_bytes // (4 * tx))
         tc = min(n_c, hw.input_mem_bytes // (bytes_per * tx))
         if tk < 1 or tc < 1:
             continue
-        trips = {"x": _ceil(n_x, tx), "k": _ceil(n_k, tk),
-                 "c": _ceil(n_c, tc)}
+        trips = {"x": Tiling(n_x, tx).rounds, "k": Tiling(n_k, tk).rounds,
+                 "c": Tiling(n_c, tc).rounds}
         for order in itertools.permutations(MACRO_LOOPS):
             yield TemporalChoice(
                 order=order, tile_x=tx, tile_k=tk, tile_c=tc,
@@ -173,13 +174,14 @@ def enumerate_temporal(layer: Layer, hw: HWSpec) -> Iterator[TemporalChoice]:
 
 
 def best_temporal(layer: Layer, hw: HWSpec, *,
-                  require_pixelwise: bool = False
+                  require_pixelwise: bool = False,
+                  tile_mode: str = "full"
                   ) -> Optional[TemporalChoice]:
     """Min-traffic temporal schedule; optionally restricted to orders
     where the C2 pixelwise fusion of trailing channel-stat nonlinears is
     legal.  Returns None only if no tile fits the buffers at all."""
     best: Optional[TemporalChoice] = None
-    for t in enumerate_temporal(layer, hw):
+    for t in enumerate_temporal(layer, hw, tile_mode=tile_mode):
         if require_pixelwise and not t.pixelwise:
             continue
         if best is None or (t.sram_bytes, t.order, t.tile_x) < \

@@ -84,7 +84,8 @@ def _unfused_nonlinear_pj(l: Layer, hw: HWSpec) -> float:
 
 def _group_cost(layers: Sequence[Layer], j: int, i: int,
                 cycles_by_name: Dict[str, int], hw: HWSpec,
-                local_buffer: int) -> Optional[Tuple[float, Group]]:
+                local_buffer: int,
+                tile_mode: str = "full") -> Optional[Tuple[float, Group]]:
     """Cost + metadata of fusing layers[j:i] into one group, or None if
     the slice is not a feasible group."""
     sl = layers[j:i]
@@ -104,7 +105,8 @@ def _group_cost(layers: Sequence[Layer], j: int, i: int,
 
     tile: Optional[tiler.GroupTile] = None
     if len(macs) > 1:
-        tile = tiler.tile_group(sl, local_buffer=local_buffer)
+        tile = tiler.tile_group(sl, local_buffer=local_buffer,
+                                mode=tile_mode)
         if tile is None:
             return None
         # depth-first group: SRAM traffic comes from the tiler (input
@@ -152,11 +154,14 @@ def partition_chain(layers: Sequence[Layer],
                     hw: Optional[HWSpec] = None, *,
                     act_budget: Optional[int] = None,
                     local_buffer: Optional[int] = None,
-                    max_span: int = 10) -> Partition:
+                    max_span: int = 10,
+                    tile_mode: str = "full") -> Partition:
     """Optimal contiguous segmentation of the chain into fusion groups.
 
     ``cycles_by_name`` carries each MAC layer's compute cycles under its
     chosen spatial mapping (the partitioner is mapping-agnostic).
+    ``tile_mode`` selects the group-tile candidate space ("full" =
+    divisors + imperfect factors, "pow2" = the ablation baseline).
     """
     hw = hw or HWSpec()
     if act_budget is None:
@@ -173,7 +178,8 @@ def partition_chain(layers: Sequence[Layer],
         for j in range(max(0, i - max_span), i):
             if dp[j] == INF:
                 continue
-            gc = _group_cost(layers, j, i, cycles_by_name, hw, local_buffer)
+            gc = _group_cost(layers, j, i, cycles_by_name, hw, local_buffer,
+                             tile_mode=tile_mode)
             if gc is None:
                 continue
             pj, grp = gc

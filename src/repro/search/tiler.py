@@ -1,10 +1,13 @@
 """Budget-driven tile search for depth-first fusion groups.
 
 Replaces the fixed 9-candidate ``candidates_x`` list of
-``core.fusion.optimize_tile`` with an enumeration derived from the
-buffer budget itself, and generalizes from the IBN pw-pair to arbitrary
-chains of pixel-aligned MAC layers (pointwise / matmul) with interleaved
-elementwise or channel-stat nonlinears.
+``core.fusion.optimize_tile`` with the full divisor + imperfect-factor
+enumeration of ``core.tiling`` (all divisors of the pixel extent, the
+powers of two, and the budget pivots — imperfect factors cover the
+extent with a ragged last tile charged its true cost), and generalizes
+from the IBN pw-pair to arbitrary chains of pixel-aligned MAC layers
+(pointwise / matmul) with interleaved elementwise or channel-stat
+nonlinears.
 
 Tiling model (the paper's Fig 4 depth-first schedule):
   * the group input streams from SRAM; every intermediate tensor lives
@@ -16,7 +19,9 @@ Tiling model (the paper's Fig 4 depth-first schedule):
     is the widest adjacent pair of intermediates (channel tiling would
     force partial re-computation);
   * an interior channel-stat nonlinear (norm/softmax) needs its whole
-    reduction vector resident -> full channel width at that edge.
+    reduction vector resident -> full channel width at that edge;
+  * a ragged last slab (imperfect tile_x) moves its true, smaller data
+    volume but still pays the full per-round weight re-stream.
 
 Infeasible tilings (tile cannot fit the buffer) are *skipped*, never
 returned — a group with no feasible tile is simply not fusible.
@@ -28,31 +33,18 @@ from typing import List, Optional, Sequence, Tuple
 
 from repro.core import fusion
 from repro.core.fusion import FusedTile
+from repro.core.tiling import Tiling, budget_tile_candidates
 from repro.core.workload import MAC_OPS, NORM, SOFTMAX, Layer
 
 
-def _ceil(a: int, b: int) -> int:
-    return -(-a // b)
-
-
 def _candidates_x(n: int, widest: int, bytes_per: int,
-                  local_buffer: int) -> List[int]:
-    """Budget-driven tile_x candidates: powers of two up to n, plus the
-    two budget pivots — the largest x-tile that keeps the widest
+                  local_buffer: int, mode: str = "full") -> List[int]:
+    """Tile_x candidates: all divisors of ``n`` plus powers of two plus
+    the two budget pivots — the largest x-tile that keeps the widest
     intermediate fully resident, and the largest that fits a single
-    channel."""
-    cands = set()
-    v = 1
-    while v < n:
-        cands.add(v)
-        v *= 2
-    cands.add(n)
-    full_width = local_buffer // max(1, widest * bytes_per)
-    single = local_buffer // max(1, bytes_per)
-    for pivot in (full_width, single):
-        if 1 <= pivot:
-            cands.add(min(pivot, n))
-    return sorted(cands)
+    channel.  ``mode="pow2"`` is the power-of-two ablation baseline."""
+    return budget_tile_candidates(n, widest, bytes_per, local_buffer,
+                                  mode=mode)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,17 +53,22 @@ class GroupTile:
     tile_x: int                  # pixels per slab
     tile_c: int                  # channels per slab of the widest edge
     buffer_bytes: int            # peak live intermediate footprint
-    weight_rereads: int          # full weight re-streams (per x-tile)
+    weight_rereads: int          # full weight re-streams (x rounds,
+    #                              ragged round included)
     sram_traffic: int            # total SRAM bytes for the group
+    ragged_x: int = 0            # ragged last x slab (0 = perfect)
+    ragged_c: int = 0            # ragged last c slab (0 = perfect)
 
 
 def optimize_tile(expand: Layer, project: Layer, *, local_buffer: int,
-                  full_width: bool = False) -> Optional[FusedTile]:
+                  full_width: bool = False,
+                  mode: str = "full") -> Optional[FusedTile]:
     """ZigZag-style (tile_x, tile_c) search for a fused MAC pair with the
     candidate list derived from ``local_buffer`` instead of hardcoded.
 
     One traffic model only: this delegates to ``core.fusion``'s
-    optimizer, supplying budget-driven candidates.  Returns None when no
+    optimizer, supplying divisor + imperfect-factor candidates (or the
+    pow2-only ablation list for ``mode="pow2"``).  Returns None when no
     tile fits (the pair is not fusible at this budget).
     ``full_width=True`` forces the intermediate to keep its whole
     channel extent resident (required when a channel-stat nonlinear sits
@@ -80,7 +77,8 @@ def optimize_tile(expand: Layer, project: Layer, *, local_buffer: int,
     n = expand.ox * expand.oy * expand.b
     c_mid = expand.k
     bytes_per = max(1, expand.bits // 8)
-    cands = tuple(_candidates_x(n, c_mid, bytes_per, local_buffer))
+    cands = tuple(_candidates_x(n, c_mid, bytes_per, local_buffer,
+                                mode=mode))
     try:
         return fusion.optimize_tile(expand, project,
                                     local_buffer=local_buffer,
@@ -100,8 +98,8 @@ def chain_compatible(a: Layer, b: Layer) -> bool:
     return pa == pb and a.k == b.c
 
 
-def tile_group(group: Sequence[Layer], *, local_buffer: int
-               ) -> Optional[GroupTile]:
+def tile_group(group: Sequence[Layer], *, local_buffer: int,
+               mode: str = "full") -> Optional[GroupTile]:
     """Feasibility + tiling for a fusion-group layer slice.
 
     The slice holds >= 1 MAC layer plus interleaved nonlinears.  A single
@@ -130,13 +128,14 @@ def tile_group(group: Sequence[Layer], *, local_buffer: int
 
     if len(macs) == 2:
         ft = optimize_tile(macs[0], macs[1], local_buffer=local_buffer,
-                           full_width=stats_interior)
+                           full_width=stats_interior, mode=mode)
         if ft is None:
             return None
         return GroupTile(tile_x=ft.tile_x, tile_c=ft.tile_c,
                          buffer_bytes=ft.buffer_bytes,
                          weight_rereads=ft.weight_rereads,
-                         sram_traffic=ft.sram_traffic)
+                         sram_traffic=ft.sram_traffic,
+                         ragged_x=ft.ragged_x, ragged_c=ft.ragged_c)
 
     # deeper chain: full-width x-slabs; an intermediate is live from its
     # production until its consumer's slab is complete, so the peak
@@ -147,18 +146,23 @@ def tile_group(group: Sequence[Layer], *, local_buffer: int
     widths = [l.k for l in macs[:-1]]
     peak_width = max(a + b for a, b in zip(widths, widths[1:])) \
         if len(widths) > 1 else widths[0]
+    w_bytes = sum(l.weight_bytes for l in macs)
     best: Optional[GroupTile] = None
-    for tx in _candidates_x(n, peak_width, bytes_per, local_buffer):
+    for tx in _candidates_x(n, peak_width, bytes_per, local_buffer,
+                            mode=mode):
         buf = tx * peak_width * bytes_per
         if buf > local_buffer:
             continue
-        n_xt = _ceil(n, tx)
-        w_bytes = sum(l.weight_bytes for l in macs)
-        traffic = (macs[0].input_bytes + w_bytes * n_xt
-                   + macs[-1].output_bytes)
+        tiling_x = Tiling(n, tx)
+        # weights re-stream in full each x round (ragged round included);
+        # input / output move their exact volume once.
+        traffic = tiling_x.traffic(per_elem=0, per_round=w_bytes) \
+            + macs[0].input_bytes + macs[-1].output_bytes
         cand = GroupTile(tile_x=tx, tile_c=max(widths),
                          buffer_bytes=buf,
-                         weight_rereads=n_xt, sram_traffic=traffic)
+                         weight_rereads=tiling_x.rounds,
+                         sram_traffic=traffic,
+                         ragged_x=tiling_x.ragged)
         if best is None or cand.sram_traffic < best.sram_traffic:
             best = cand
     return best

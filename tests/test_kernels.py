@@ -62,6 +62,43 @@ def test_fused_ibn_block_invariance():
                                        rtol=2e-5, atol=2e-5)
 
 
+def test_fused_ibn_ragged_edges():
+    """Imperfect blocks on EdgeNeXt-style odd extents: 197 pixels x
+    d_ff=160 with 64-blocks leaves ragged final blocks on both grid
+    axes; the padded blocks must be masked out in-kernel."""
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.normal(ks[0], (197, 48))
+    w1 = jax.random.normal(ks[1], (48, 160)) * 0.1
+    w2 = jax.random.normal(ks[2], (160, 48)) * 0.1
+    out = ops.fused_ibn(x, w1, w2, block_m=64, block_f=64)
+    want = ref.fused_ibn_ref(x, w1, w2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("m,d,f,bm,bf", [
+    (197, 48, 160, 64, 64),      # ragged m (197 = 3*64 + 5) and f
+    (304, 160, 304, 128, 128),   # ragged both, stage-4 dims
+    (48, 48, 192, 32, 128),      # ragged m only
+    (160, 64, 304, 32, 256),     # ragged f only (304 = 256 + 48)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("gated", [False, True])
+def test_fused_ibn_ragged_sweep(m, d, f, bm, bf, dtype, gated):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (m, d), jnp.float32).astype(dtype)
+    w1 = (jax.random.normal(ks[1], (d, f)) * 0.1).astype(dtype)
+    w2 = (jax.random.normal(ks[2], (f, d)) * 0.1).astype(dtype)
+    wg = (jax.random.normal(ks[3], (d, f)) * 0.1).astype(dtype) \
+        if gated else None
+    act = "silu" if gated else "gelu"
+    out = ops.fused_ibn(x, w1, w2, wg, activation=act, block_m=bm,
+                        block_f=bf)
+    want = ref.fused_ibn_ref(x, w1, w2, wg, activation=act)
+    _assert_close(out, want, dtype)
+
+
 # ---------------------------------------------------------------------------
 # matmul + LayerNorm epilogue (C2)
 # ---------------------------------------------------------------------------
@@ -93,6 +130,41 @@ def test_matmul_ln_rows_normalized():
                         block_m=32, block_k=32)
     np.testing.assert_allclose(np.asarray(out.mean(-1)), 0.0, atol=1e-5)
     np.testing.assert_allclose(np.asarray(out.var(-1)), 1.0, atol=1e-3)
+
+
+def test_matmul_ln_ragged_edges():
+    """block_k no longer needs to divide K: the ragged reduction block
+    is zero-masked in-kernel so the LN statistics stay exact."""
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (197, 48))
+    w = jax.random.normal(ks[1], (48, 160)) * 0.1
+    b = jax.random.normal(ks[2], (160,)) * 0.1
+    g = jnp.ones((160,)) + 0.1 * jax.random.normal(ks[3], (160,))
+    be = jax.random.normal(ks[4], (160,)) * 0.1
+    out = ops.matmul_ln(x, w, b, g, be, block_m=64, block_k=32)
+    want = ref.matmul_ln_ref(x, w, b, g, be)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("m,k,n,bm,bk", [
+    (197, 48, 160, 64, 32),      # ragged m and k
+    (160, 304, 48, 64, 128),     # ragged k (304 = 2*128 + 48)
+    (304, 160, 304, 128, 64),    # ragged m and k, stage-4 dims
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_ln_ragged_sweep(m, k, n, bm, bk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32).astype(dtype)
+    w = (jax.random.normal(ks[1], (k, n)) * 0.1).astype(dtype)
+    b = (jax.random.normal(ks[2], (n,)) * 0.1).astype(dtype)
+    g = jnp.ones((n,), dtype) + 0.1 * jax.random.normal(
+        ks[3], (n,)).astype(dtype)
+    be = (jax.random.normal(ks[4], (n,)) * 0.1).astype(dtype)
+    out = ops.matmul_ln(x, w, b, g, be, block_m=bm, block_k=bk)
+    want = ref.matmul_ln_ref(x, w, b, g, be)
+    _assert_close(out, want, dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +201,42 @@ def test_flash_attention_bf16(dtype):
     out = ops.flash_attention(q, k, v, block_q=16, block_k=16)
     want = ref.attention_ref(q, k, v)
     _assert_close(out, want, dtype)
+
+
+def test_flash_attention_ragged_edges():
+    """ViT-style ragged sequence (197 = 196 patches + CLS): padded keys
+    must fall out of the online softmax via the in-kernel kv_len mask."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 197, 16))
+    k = jax.random.normal(ks[1], (1, 2, 197, 16))
+    v = jax.random.normal(ks[2], (1, 2, 197, 16))
+    out = ops.flash_attention(q, k, v, causal=False, block_q=64,
+                              block_k=64)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("sq,sk,bq,bk", [
+    (197, 197, 64, 64),          # ragged both sequence axes
+    (160, 304, 64, 128),         # ragged kv only (304 = 2*128 + 48)
+    (304, 304, 128, 128),        # stage-4 XCA token extent
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 48)])
+def test_flash_attention_ragged_sweep(sq, sk, bq, bk, causal, window):
+    if causal and sq > sk:
+        pytest.skip("causal with sq>sk undefined here")
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, sq, 16))
+    k = jax.random.normal(ks[1], (1, 2, sk, 16))
+    v = jax.random.normal(ks[2], (1, 2, sk, 16))
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=bq, block_k=bk)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
 
 
 # ---------------------------------------------------------------------------

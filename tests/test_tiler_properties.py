@@ -1,0 +1,253 @@
+"""Property-based invariants for the divisor/imperfect-factor tile search.
+
+Hypothesis is unavailable offline, so the properties run as seeded
+randomized sweeps: random pixel-aligned layer chains and buffer budgets,
+checked against a brute-force reference that scores EVERY tile size
+1..n under the same ragged-edge traffic model.  The invariants:
+
+  * feasibility — every returned tile fits the local buffer; infeasible
+    groups return None, never an over-budget tile;
+  * coverage — the chosen (tile_x, tile_c) cover their extents exactly
+    (sum of round sizes == extent, ragged last round included);
+  * optimality sandwich — the tiler never beats the full exhaustive
+    optimum (cost-model consistency) and never loses to the best
+    divisor (the enumeration really contains all divisors);
+  * the pow2-only ablation never beats the full enumeration.
+
+Plus the ``search.lower._snap`` contract: (block, n_ragged) with the
+degenerate ``lo > hi`` band collapsing to the upper bound.
+"""
+import random
+
+import pytest
+
+from repro.core import tiling
+from repro.core.costmodel import HWSpec
+from repro.core.tiling import Tiling, ceil_div, divisors
+from repro.core.workload import ACT, NORM, PWCONV, Layer
+from repro.search import lower, mapper, tiler
+
+
+# ---------------------------------------------------------------------------
+# core.tiling primitives
+# ---------------------------------------------------------------------------
+
+
+def test_divisors_exact():
+    for n in (1, 2, 7, 48, 96, 160, 197, 304, 4096):
+        ds = divisors(n)
+        assert ds == sorted(d for d in range(1, n + 1) if n % d == 0)
+
+
+def test_tiling_covers_and_ragged():
+    rng = random.Random(1)
+    for _ in range(200):
+        n = rng.randint(1, 5000)
+        t = rng.randint(1, n)
+        ti = Tiling(n, t)
+        sizes = ti.round_sizes()
+        assert sum(sizes) == n                      # coverage, always
+        assert len(sizes) == ti.rounds == ceil_div(n, t)
+        assert ti.ragged == n % t
+        assert all(s == t for s in sizes[:-1])
+        assert sizes[-1] == (ti.ragged or t)
+
+
+def test_tile_candidates_contains_divisors_and_extras():
+    cands = tiling.tile_candidates(160, extra=(38, 999))
+    assert set(divisors(160)) <= set(cands)
+    assert 38 in cands and 160 in cands             # extras clamped to n
+    assert all(1 <= c <= 160 for c in cands)
+    assert tiling.tile_candidates(160, mode="pow2") == \
+        [1, 2, 4, 8, 16, 32, 64, 128]
+    # legacy = the PR-1 seed space: pow2s + the extent + the pivots,
+    # but no non-trivial divisors
+    legacy = tiling.tile_candidates(160, extra=(38,), mode="legacy")
+    assert 160 in legacy and 38 in legacy and 5 not in legacy
+    assert set(legacy) <= set(cands)                # full is a superset
+    with pytest.raises(ValueError):
+        tiling.tile_candidates(8, mode="bogus")
+
+
+# ---------------------------------------------------------------------------
+# brute-force reference (same ragged traffic model, every tile size)
+# ---------------------------------------------------------------------------
+
+
+def _pair_traffic(exp, proj, tx, local_buffer, full_width=False):
+    """Mirror of fusion.optimize_tile's model for one tile_x candidate;
+    None if infeasible."""
+    n = exp.b * exp.ox * exp.oy
+    c_mid = exp.k
+    bits = exp.bits // 8
+    tc = min(c_mid, local_buffer // max(1, tx * bits))
+    if tc < 1 or tx * tc * bits > local_buffer:
+        return None
+    if full_width and tc < c_mid:
+        return None
+    n_xt = ceil_div(n, tx)
+    n_ct = ceil_div(c_mid, tc)
+    return (n * exp.c * bits * n_ct
+            + (exp.c * c_mid + c_mid * proj.k) * bits * n_xt
+            + n * proj.k * bits)
+
+
+def _brute_optimum(exp, proj, local_buffer, tile_sizes, full_width=False):
+    costs = [c for c in (_pair_traffic(exp, proj, tx, local_buffer,
+                                       full_width)
+                         for tx in tile_sizes) if c is not None]
+    return min(costs) if costs else None
+
+
+def _rand_pair(rng):
+    n = rng.randint(1, 512)
+    c_in = rng.randint(1, 96)
+    c_mid = rng.randint(1, 512)
+    c_out = rng.randint(1, 96)
+    exp = Layer("e", PWCONV, k=c_mid, c=c_in, ox=n)
+    proj = Layer("p", PWCONV, k=c_out, c=c_mid, ox=n)
+    return exp, proj
+
+
+def test_pair_tiler_optimality_sandwich():
+    """full-exhaustive optimum <= tiler <= best-divisor optimum, and the
+    returned tile always fits the budget and covers both extents."""
+    rng = random.Random(42)
+    for _ in range(40):
+        exp, proj = _rand_pair(rng)
+        n = exp.b * exp.ox * exp.oy
+        buf = rng.choice((64, 512, 4096, 24 * 1024))
+        t = tiler.optimize_tile(exp, proj, local_buffer=buf)
+        exhaustive = _brute_optimum(exp, proj, buf, range(1, n + 1))
+        if t is None:
+            assert exhaustive is None, "tiler missed a feasible tile"
+            continue
+        assert t.buffer_bytes <= buf
+        assert sum(Tiling(n, t.tile_x).round_sizes()) == n
+        assert sum(Tiling(exp.k, t.tile_c).round_sizes()) == exp.k
+        assert Tiling(n, t.tile_x).ragged == t.ragged_x
+        assert Tiling(exp.k, t.tile_c).ragged == t.ragged_c
+        assert t.sram_traffic >= exhaustive          # never beats brute force
+        div_opt = _brute_optimum(exp, proj, buf, divisors(n))
+        if div_opt is not None:
+            assert t.sram_traffic <= div_opt         # contains all divisors
+
+
+def test_pair_tiler_ablation_modes_never_beat_full():
+    rng = random.Random(7)
+    for _ in range(25):
+        exp, proj = _rand_pair(rng)
+        buf = rng.choice((256, 4096, 24 * 1024))
+        full = tiler.optimize_tile(exp, proj, local_buffer=buf)
+        for mode in ("legacy", "pow2"):
+            abl = tiler.optimize_tile(exp, proj, local_buffer=buf,
+                                      mode=mode)
+            if abl is None:
+                continue                # ablation space may miss entirely
+            assert full is not None
+            assert full.sram_traffic <= abl.sram_traffic
+
+
+def _rand_chain(rng):
+    """Random pixel-aligned pwconv chain with interleaved nonlinears."""
+    n = rng.randint(1, 256)
+    widths = [rng.randint(1, 128) for _ in range(rng.randint(3, 5))]
+    layers = []
+    for i, (c, k) in enumerate(zip(widths, widths[1:])):
+        layers.append(Layer(f"m{i}", PWCONV, k=k, c=c, ox=n))
+        if rng.random() < 0.5:
+            op = rng.choice((ACT, NORM))
+            layers.append(Layer(f"n{i}", op, c=k, ox=n))
+    return layers
+
+
+def test_group_tiler_feasibility_and_coverage():
+    rng = random.Random(9)
+    for _ in range(40):
+        chain = _rand_chain(rng)
+        buf = rng.choice((128, 1024, 8192, 24 * 1024))
+        t = tiler.tile_group(chain, local_buffer=buf)
+        if t is None:
+            continue
+        assert t.buffer_bytes <= buf, "over-budget tile returned"
+        if t.tile_x:                     # multi-MAC depth-first group
+            n = chain[0].b * chain[0].ox * chain[0].oy
+            ti = Tiling(n, t.tile_x)
+            assert sum(ti.round_sizes()) == n
+            assert ti.rounds == t.weight_rereads
+            assert ti.ragged == t.ragged_x
+
+
+def test_group_tiler_infeasible_returns_none():
+    a = Layer("a", PWCONV, k=512, c=512, ox=64)
+    b = Layer("b", PWCONV, k=512, c=512, ox=64)
+    c = Layer("c", PWCONV, k=512, c=512, ox=64)
+    # 3-MAC chain needs a full-width (512+512) x-slab: 1 pixel > 1000 B
+    assert tiler.tile_group([a, b, c], local_buffer=1000) is None
+    assert tiler.tile_group([a, b, c], local_buffer=1 << 20) is not None
+
+
+# ---------------------------------------------------------------------------
+# mapper temporal budgets (same ragged accounting)
+# ---------------------------------------------------------------------------
+
+
+def test_temporal_tiles_respect_buffers_and_cover():
+    hw = HWSpec()
+    rng = random.Random(3)
+    for _ in range(10):
+        l = Layer("l", PWCONV, k=rng.randint(1, 512),
+                  c=rng.randint(1, 512), ox=rng.randint(1, 304))
+        n_x, n_k, n_c = mapper.macro_extents(l)
+        bytes_per = max(1, l.bits // 8)
+        for t in mapper.enumerate_temporal(l, hw):
+            assert 4 * t.tile_x * t.tile_k <= hw.output_rf_bytes \
+                or t.tile_k == n_k
+            assert bytes_per * t.tile_x * t.tile_c <= hw.input_mem_bytes \
+                or t.tile_c == n_c
+            assert sum(Tiling(n_x, t.tile_x).round_sizes()) == n_x
+
+
+def test_temporal_pow2_mode_never_beats_full():
+    hw = HWSpec()
+    l = Layer("l", PWCONV, k=304, c=160, ox=304)
+    full = mapper.best_temporal(l, hw)
+    p2 = mapper.best_temporal(l, hw, tile_mode="pow2")
+    assert full.sram_bytes <= p2.sram_bytes
+
+
+# ---------------------------------------------------------------------------
+# search.lower._snap contract
+# ---------------------------------------------------------------------------
+
+
+def test_snap_returns_block_and_ragged():
+    b, r = lower._snap(64, 8, 256, 4096)
+    assert (b, r) == (64, 0)
+    b, r = lower._snap(300, 8, 256, 304)       # imperfect: 304 = 256 + 48
+    assert (b, r) == (256, 48)
+    assert b * (ceil_div(304, b) - 1) + r == 304
+    b, r = lower._snap(64, 8, 256, 48)         # clamped to extent
+    assert (b, r) == (32, 16)
+    b, r = lower._snap(5, 8, 256, 4096)        # lo floor applies
+    assert (b, r) == (8, 0)
+
+
+def test_snap_degenerate_band_collapses_to_hi():
+    """lo > hi: the cap must win — the block never exceeds hi."""
+    b, r = lower._snap(100, 64, 8, 4096)
+    assert b <= 8 and (b & (b - 1)) == 0
+    assert r == 4096 % b
+    b, r = lower._snap(1, 64, 8, 5)            # and never the extent
+    assert b <= 5 and r == 5 % b
+
+
+def test_snap_never_signals_false_perfection():
+    rng = random.Random(11)
+    for _ in range(200):
+        extent = rng.randint(1, 5000)
+        v = rng.randint(1, 1024)
+        b, r = lower._snap(v, 8, 256, extent)
+        assert 1 <= b <= extent
+        assert r == extent % b
+        assert (r == 0) == (extent % b == 0)
