@@ -10,17 +10,27 @@ paper's analyses:
   Table I — FPS / FPS/W of the full EdgeNeXt-S network
 
 Hardware template = the paper's accelerator: 16x16 PEs @ 100 MHz, 8-bit
-data, 8 kB input mem, 24 kB output RF, 512 kB SRAM, 128-bit DRAM bus,
-100 pJ/byte DRAM (the paper's stated assumption).  Remaining energy
+data, and an N-level ``core.memory.MemoryHierarchy`` (default: the
+paper's 8 kB input mem + 24 kB output RF, 512 kB SRAM, 128-bit DRAM bus
+at 100 pJ/byte — ``memory.paper_hierarchy``).  Remaining energy
 constants are 28nm-typical and calibrated so the peak efficiency lands at
 the paper's 1.39 TOPS/W (see tests/test_costmodel.py).
+
+Traffic and energy are accounted *per level*: ``LayerCost.traffic`` maps
+level name -> bytes moved through that level's port, and every energy
+bucket is derived from the hierarchy (``energy_buckets``) so adding a
+level can never silently drop energy.  The seed's scalar fields
+(``sram_bytes``, ``e_dram_byte``, ...) remain as back-compat constructor
+kwargs / properties that read and write the default 3-level hierarchy
+bit-exactly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import dataflow
+from repro.core.memory import MemoryHierarchy, MemoryLevel, paper_hierarchy
 from repro.core.workload import (ACT, ELEMWISE, MAC_OPS, NORM, SOFTMAX,
                                  Layer)
 
@@ -31,20 +41,123 @@ class HWSpec:
     cols: int = 16
     clock_hz: float = 100e6
     bits: int = 8
-    input_mem_bytes: int = 8 * 1024
-    output_rf_bytes: int = 24 * 1024
-    sram_bytes: int = 512 * 1024
-    dram_bus_bytes_per_cycle: int = 16            # 128-bit bus
     # energy constants (pJ) — calibrated so peak efficiency = the paper's
     # 1.39 TOPS/W and the baseline DRAM energy share lands at ~52% (Fig 5);
     # see tests/test_costmodel.py for the pinned calibration checks.
     e_mac: float = 1.1                            # incl. local W-RF access
-    e_rf_byte: float = 0.15
-    e_sram_byte: float = 1.2
-    e_dram_byte: float = 100.0                    # paper's assumption
     static_mw: float = 4.0                        # clock tree + leakage
-    # on-chip SRAM reserved for activations (rest: weight double-buffers)
-    act_budget_bytes: int = 192 * 1024
+    hierarchy: MemoryHierarchy = dataclasses.field(
+        default_factory=paper_hierarchy)
+
+    def __init__(self, rows: int = 16, cols: int = 16,
+                 clock_hz: float = 100e6, bits: int = 8,
+                 e_mac: float = 1.1, static_mw: float = 4.0,
+                 hierarchy: Optional[MemoryHierarchy] = None, *,
+                 input_mem_bytes: Optional[int] = None,
+                 output_rf_bytes: Optional[int] = None,
+                 sram_bytes: Optional[int] = None,
+                 act_budget_bytes: Optional[int] = None,
+                 dram_bus_bytes_per_cycle: Optional[int] = None,
+                 e_rf_byte: Optional[float] = None,
+                 e_sram_byte: Optional[float] = None,
+                 e_dram_byte: Optional[float] = None):
+        """Accepts either a ``hierarchy`` or the seed's scalar fields
+        (or both: scalars override onto the hierarchy, which is what
+        keeps ``dataclasses.replace(hw, sram_bytes=...)`` working).
+
+        Scalars map onto the hierarchy as: input/output RF -> the
+        innermost level's partitions, SRAM/act/e_sram -> the spill
+        (outermost on-chip) level, DRAM energy/bus -> the outermost
+        level.
+        """
+        object.__setattr__(self, "rows", rows)
+        object.__setattr__(self, "cols", cols)
+        object.__setattr__(self, "clock_hz", clock_hz)
+        object.__setattr__(self, "bits", bits)
+        object.__setattr__(self, "e_mac", e_mac)
+        object.__setattr__(self, "static_mw", static_mw)
+        def _or(v, default):
+            return default if v is None else v
+        if hierarchy is None:
+            hierarchy = paper_hierarchy(
+                input_mem_bytes=_or(input_mem_bytes, 8 * 1024),
+                output_rf_bytes=_or(output_rf_bytes, 24 * 1024),
+                sram_bytes=_or(sram_bytes, 512 * 1024),
+                act_budget_bytes=_or(act_budget_bytes, 192 * 1024),
+                dram_bus_bytes_per_cycle=_or(dram_bus_bytes_per_cycle, 16),
+                e_rf_byte=_or(e_rf_byte, 0.15),
+                e_sram_byte=_or(e_sram_byte, 1.2),
+                e_dram_byte=_or(e_dram_byte, 100.0))
+        else:
+            inner, spill = hierarchy.innermost.name, \
+                hierarchy.spill_level.name
+            outer = hierarchy.outermost.name
+            if input_mem_bytes is not None:
+                hierarchy = hierarchy.with_partition(
+                    inner, "input", input_mem_bytes, resize=True)
+            if output_rf_bytes is not None:
+                hierarchy = hierarchy.with_partition(
+                    inner, "output", output_rf_bytes, resize=True)
+            if e_rf_byte is not None:
+                hierarchy = hierarchy.replace_level(
+                    inner, pj_per_byte=e_rf_byte)
+            if sram_bytes is not None:
+                lvl = hierarchy.spill_level
+                hierarchy = hierarchy.replace_level(
+                    spill, bytes=sram_bytes, partitions=tuple(
+                        (k, min(v, sram_bytes))
+                        for k, v in lvl.partitions))
+            if act_budget_bytes is not None:
+                hierarchy = hierarchy.with_partition(
+                    spill, "act", act_budget_bytes)
+            if e_sram_byte is not None:
+                hierarchy = hierarchy.replace_level(
+                    spill, pj_per_byte=e_sram_byte)
+            if e_dram_byte is not None:
+                hierarchy = hierarchy.replace_level(
+                    outer, pj_per_byte=e_dram_byte)
+            if dram_bus_bytes_per_cycle is not None:
+                hierarchy = hierarchy.replace_level(
+                    outer, bus_bytes_per_cycle=dram_bus_bytes_per_cycle)
+        object.__setattr__(self, "hierarchy", hierarchy)
+
+    # -- back-compat scalar views of the hierarchy --------------------
+
+    @property
+    def input_mem_bytes(self) -> int:
+        return self.hierarchy.innermost.partition("input")
+
+    @property
+    def output_rf_bytes(self) -> int:
+        return self.hierarchy.innermost.partition("output")
+
+    @property
+    def sram_bytes(self) -> int:
+        return self.hierarchy.spill_level.bytes
+
+    @property
+    def act_budget_bytes(self) -> int:
+        """On-chip spill-level capacity reserved for activations (rest:
+        weight double-buffers)."""
+        return self.hierarchy.act_budget_bytes
+
+    @property
+    def dram_bus_bytes_per_cycle(self) -> int:
+        return self.hierarchy.outermost.bus_bytes_per_cycle
+
+    @property
+    def e_rf_byte(self) -> float:
+        return self.hierarchy.innermost.pj_per_byte
+
+    @property
+    def e_sram_byte(self) -> float:
+        return self.hierarchy.spill_level.pj_per_byte
+
+    @property
+    def e_dram_byte(self) -> float:
+        return self.hierarchy.outermost.pj_per_byte
+
+    # -- derived -------------------------------------------------------
 
     @property
     def peak_macs_per_s(self) -> float:
@@ -62,16 +175,34 @@ class HWSpec:
         return ops_per_cycle / pj_per_cycle            # TOPS/W == ops/pJ
 
 
+def energy_buckets(hw: HWSpec) -> Tuple[str, ...]:
+    """The energy-bucket key set, derived from the hierarchy (single
+    source of truth): compute plus one bucket per memory level."""
+    return ("compute",) + hw.hierarchy.names
+
+
 @dataclasses.dataclass
 class LayerCost:
     layer: Layer
     mapping: str
     compute_cycles: int = 0
     stall_cycles: int = 0          # non-fused norm/softmax bus streaming
-    dram_bytes: int = 0
-    sram_bytes: int = 0
-    rf_bytes: int = 0
+    # bytes moved through each memory level's port, keyed by level name
+    traffic: Dict[str, int] = dataclasses.field(default_factory=dict)
     fused: bool = False            # folded into producer (C2) / IBN (C3)
+
+    # back-compat views onto the default 3-level rows
+    @property
+    def rf_bytes(self) -> int:
+        return self.traffic.get("rf", 0)
+
+    @property
+    def sram_bytes(self) -> int:
+        return self.traffic.get("sram", 0)
+
+    @property
+    def dram_bytes(self) -> int:
+        return self.traffic.get("dram", 0)
 
     @property
     def total_cycles(self) -> int:
@@ -80,12 +211,11 @@ class LayerCost:
         return self.compute_cycles + self.stall_cycles
 
     def energy_pj(self, hw: HWSpec) -> Dict[str, float]:
-        return {
-            "compute": self.layer.macs * hw.e_mac,
-            "rf": self.rf_bytes * hw.e_rf_byte,
-            "sram": self.sram_bytes * hw.e_sram_byte,
-            "dram": self.dram_bytes * hw.e_dram_byte,
-        }
+        out = {b: 0.0 for b in energy_buckets(hw)}
+        out["compute"] = self.layer.macs * hw.e_mac
+        for lvl in hw.hierarchy.levels:
+            out[lvl.name] += self.traffic.get(lvl.name, 0) * lvl.pj_per_byte
+        return out
 
 
 @dataclasses.dataclass
@@ -106,12 +236,19 @@ class NetworkCost:
         return 1.0 / self.latency_s
 
     def energy_pj(self) -> Dict[str, float]:
-        tot: Dict[str, float] = {"compute": 0.0, "rf": 0.0, "sram": 0.0,
-                                 "dram": 0.0}
+        tot: Dict[str, float] = {b: 0.0 for b in energy_buckets(self.hw)}
         for lc in self.layers:
             for k, v in lc.energy_pj(self.hw).items():
                 tot[k] += v
         tot["static"] = self.hw.static_mw * 1e-3 * self.latency_s * 1e12
+        return tot
+
+    def traffic_bytes(self) -> Dict[str, int]:
+        """Network totals of the per-level traffic rows."""
+        tot: Dict[str, int] = {n: 0 for n in self.hw.hierarchy.names}
+        for lc in self.layers:
+            for k, v in lc.traffic.items():
+                tot[k] += v
         return tot
 
     @property
@@ -128,11 +265,12 @@ class NetworkCost:
 
     @property
     def chip_energy_j(self) -> float:
-        """On-chip energy only — DRAM access energy is external, which is
-        how the paper's 18.4 mW / 731 FPS/W are accounted (network
-        efficiency would otherwise exceed peak efficiency)."""
+        """On-chip energy only — backing-store access energy is external,
+        which is how the paper's 18.4 mW / 731 FPS/W are accounted
+        (network efficiency would otherwise exceed peak efficiency)."""
         en = self.energy_pj()
-        return (sum(en.values()) - en["dram"]) * 1e-12
+        return (sum(en.values())
+                - en[self.hw.hierarchy.outermost.name]) * 1e-12
 
     @property
     def chip_power_w(self) -> float:
@@ -147,12 +285,25 @@ class NetworkCost:
         return self.energy_j * self.latency_s
 
     def dram_bytes(self) -> int:
-        return sum(lc.dram_bytes for lc in self.layers)
+        outer = self.hw.hierarchy.outermost.name
+        return sum(lc.traffic.get(outer, 0) for lc in self.layers)
 
 
 # ---------------------------------------------------------------------------
 # Per-layer costing
 # ---------------------------------------------------------------------------
+
+
+def _add(traffic: Dict[str, int], level: str, nbytes: int) -> None:
+    if nbytes:
+        traffic[level] = traffic.get(level, 0) + nbytes
+
+
+def _stream_level(hw: HWSpec) -> MemoryLevel:
+    """The level operand streaming crosses by default: the one feeding
+    the PE-coupled buffers.  The searched schedule refines this with
+    per-operand loop placements (see ``search.mapper``)."""
+    return hw.hierarchy.levels[1]
 
 
 def _mac_layer_cost(layer: Layer, hw: HWSpec, mapping,
@@ -165,10 +316,10 @@ def _mac_layer_cost(layer: Layer, hw: HWSpec, mapping,
         cyc = dataflow.cycles_generic(layer, mapping, hw.rows, hw.cols,
                                       fixed_wiring=fixed_wiring)
         mapping = "|".join(mapping).upper()        # display form
-    # SRAM traffic: inputs read once (output-stationary RF holds partials
-    # across the C-temporal loop), outputs written once, weights streamed.
-    # A depth-first fusion group replaces this flat estimate with the
-    # tiler's ragged-aware accounting via ``sram_override``.
+    # stream-level traffic: inputs read once (output-stationary RF holds
+    # partials across the C-temporal loop), outputs written once, weights
+    # streamed.  A depth-first fusion group replaces this flat estimate
+    # with the tiler's ragged-aware accounting via ``sram_override``.
     sram = layer.input_bytes + layer.output_bytes + layer.weight_bytes \
         if sram_override is None else sram_override
     # RF traffic: one 32b partial accumulate per MAC cycle per active PE,
@@ -180,9 +331,12 @@ def _mac_layer_cost(layer: Layer, hw: HWSpec, mapping,
     # DRAM transfers overlap compute through the writeback buffer; only
     # the excess beyond the compute window stalls the array.
     stall = max(0, _bus_cycles(dram, hw) - cyc)
+    traffic: Dict[str, int] = {}
+    _add(traffic, hw.hierarchy.innermost.name, rf)
+    _add(traffic, _stream_level(hw).name, sram)
+    _add(traffic, hw.hierarchy.outermost.name, dram)
     return LayerCost(layer=layer, mapping=mapping, compute_cycles=cyc,
-                     stall_cycles=stall, dram_bytes=dram, sram_bytes=sram,
-                     rf_bytes=rf)
+                     stall_cycles=stall, traffic=traffic)
 
 
 def _bus_cycles(nbytes: int, hw: HWSpec) -> int:
@@ -206,9 +360,12 @@ def _nonlinear_layer_cost(layer: Layer, hw: HWSpec, fused: bool,
     # statistics pass + apply pass for norm-like ops; one pass for act
     passes = 2 if layer.op in (NORM, SOFTMAX) else 1
     cycles = passes * _bus_cycles(stream, hw) + _bus_cycles(extra_dram, hw)
+    traffic: Dict[str, int] = {}
+    _add(traffic, hw.hierarchy.innermost.name, nbytes)
+    _add(traffic, _stream_level(hw).name, passes * stream)
+    _add(traffic, hw.hierarchy.outermost.name, extra_dram)
     return LayerCost(layer=layer, mapping="-", stall_cycles=cycles,
-                     sram_bytes=passes * stream, dram_bytes=extra_dram,
-                     rf_bytes=nbytes)
+                     traffic=traffic)
 
 
 def cost_network(
@@ -251,7 +408,8 @@ def cost_network(
 
 def group_sram_overrides(layers: List[Layer], groups, tiles
                          ) -> Dict[str, int]:
-    """Per-MAC-layer SRAM byte overrides for depth-first fusion groups.
+    """Per-MAC-layer stream-level byte overrides for depth-first fusion
+    groups.
 
     ``groups`` is a sequence of layer-name tuples (one per fusion group),
     ``tiles`` maps the group's head MAC name to the tiler's summary dict.
@@ -301,7 +459,7 @@ def cost_network_scheduled(
       fixed_wiring    : the array's columns are a hard-wired adder tree
                         (non-reconfigurable baseline) — generic mappings
                         are costed with the column-void penalty
-      sram_overrides  : per-MAC-layer SRAM byte replacements (see
+      sram_overrides  : per-MAC-layer stream-level byte replacements (see
                         ``group_sram_overrides``) — the tile-aware,
                         ragged-edge accounting of depth-first groups.
                         Omitted: the flat read-once/write-once estimate,

@@ -116,16 +116,22 @@ class FusedTile:
     ragged_c: int = 0    # size of the ragged last c tile (0 = perfect)
 
 
-def optimize_tile(expand: Layer, project: Layer, *, local_buffer: int,
+def optimize_tile(expand: Layer, project: Layer, *, local_buffer,
                   candidates_x: Optional[Tuple[int, ...]] = None,
                   full_width: bool = False,
                   mode: str = "full") -> FusedTile:
     """Pick (tile_x, tile_c) minimizing SRAM traffic subject to the tile of
     T fitting in the local buffer (paper: 'tile sizes optimized by ZigZag').
 
+    ``local_buffer`` is a byte capacity or a per-level budget vector
+    (the ``MemoryHierarchy`` residence candidates): every level
+    contributes its own candidate pivots while feasibility is checked
+    against the largest level — the per-level *choice* (which level's
+    pJ/byte the interior pays) is ``search.tiler.tile_group``'s job.
+
     ``candidates_x`` defaults to the full divisor + imperfect-factor
     enumeration of ``core.tiling`` (all divisors of the pixel extent,
-    powers of two, and the two budget pivots); ``mode="pow2"`` restricts
+    powers of two, and the budget pivots); ``mode="pow2"`` restricts
     it to the power-of-two ablation baseline.  Imperfect tile sizes are
     first-class: a tile_x that does not divide the pixel extent covers it
     with a ragged last slab, charged its true (smaller) traffic but the
@@ -150,6 +156,8 @@ def optimize_tile(expand: Layer, project: Layer, *, local_buffer: int,
     if candidates_x is None:
         candidates_x = tuple(budget_tile_candidates(
             n, c_mid, bits, local_buffer, mode=mode))
+    if not isinstance(local_buffer, int):
+        local_buffer = max(local_buffer) if local_buffer else 0
 
     w_bytes = (c_in * c_mid + c_mid * c_out) * bits
     best: Optional[FusedTile] = None

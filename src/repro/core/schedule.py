@@ -88,6 +88,17 @@ def normalized_stack(layers: List[Layer], hw: Optional[HWSpec] = None, *,
     } for r in res]
 
 
+def level_breakdown(cost: NetworkCost) -> Dict[str, Dict[str, float]]:
+    """Per-memory-level rows of a costed network: bytes through each
+    level's port and the energy they cost — the hierarchy-generalized
+    successor of the old fixed rf/sram/dram aggregates (level names come
+    from the hierarchy, so a 4-level design reports 4 rows)."""
+    en = cost.energy_pj()
+    tr = cost.traffic_bytes()
+    return {name: {"bytes": float(tr[name]), "energy_pj": en[name]}
+            for name in cost.hw.hierarchy.names}
+
+
 def layer_type_breakdown(cost: NetworkCost) -> Dict[str, Dict[str, float]]:
     """Fig 3: per-layer-type cycles vs useful MACs (spatial losses show as
     cycles >> macs/(rows*cols))."""

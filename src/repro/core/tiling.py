@@ -95,15 +95,24 @@ def tile_candidates(n: int, extra: Iterable[int] = (),
 
 
 def budget_tile_candidates(n: int, widest: int, bytes_per: int,
-                           budget: int, mode: str = "full") -> List[int]:
-    """``tile_candidates`` with the two budget pivots used across the
-    search stack: the largest tile keeping ``widest`` elements per point
-    fully resident in ``budget`` bytes, and the largest single-row tile.
-    Either pivot may be an imperfect factor of ``n`` — that is the point.
+                           budget, mode: str = "full") -> List[int]:
+    """``tile_candidates`` with the budget pivots used across the search
+    stack: per budget, the largest tile keeping ``widest`` elements per
+    point fully resident, and the largest single-row tile.  Either pivot
+    may be an imperfect factor of ``n`` — that is the point.
+
+    ``budget`` is a byte capacity or a per-level budget vector (one
+    capacity per candidate memory level — every level contributes its
+    own pair of pivots, so an N-level hierarchy widens the candidate
+    set instead of collapsing to one buffer's view).
     """
-    full_width = budget // max(1, widest * bytes_per)
-    single = budget // max(1, bytes_per)
-    return tile_candidates(n, extra=(full_width, single), mode=mode)
+    budgets: Sequence[int] = (budget,) if isinstance(budget, int) \
+        else tuple(budget)
+    extra: List[int] = []
+    for b in budgets:
+        extra.append(b // max(1, widest * bytes_per))
+        extra.append(b // max(1, bytes_per))
+    return tile_candidates(n, extra=extra, mode=mode)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -305,6 +305,119 @@ def efficientvit_workload(*, img_size: int = 224,
     return layers
 
 
+def mobilevit_workload(*, img_size: int = 256,
+                       mv2_out: Tuple[int, ...] = (32, 64, 96, 128, 160),
+                       vit_dims: Tuple[int, ...] = (144, 192, 240),
+                       vit_depths: Tuple[int, ...] = (2, 4, 3),
+                       heads: int = 4, ffn_ratio: int = 2,
+                       mv2_expand: int = 4, patch: int = 2,
+                       num_classes: int = 1000,
+                       batch: int = 1) -> List[Layer]:
+    """MobileViT-S [arXiv:2110.02178] as a loop-dim layer chain — the
+    second hybrid-ViT graph next to EdgeNeXt-S (defaults follow the S
+    variant: ~5.6M params / ~2 GMACs at 256x256).
+
+    MV2 stages are MobileNetV2 inverted residuals (pw-expand -> act ->
+    dw 3x3 -> pw-project): unlike EdgeNeXt's IBNs the depthwise sits
+    *inside* the bottleneck, so no (expand, act, project) ibn triple is
+    annotated — the DP partitioner has to discover what is fusible from
+    traffic alone.  MobileViT blocks unfold the feature map into
+    ``patch*patch`` pixel streams of N = H*W/patch^2 tokens and run a
+    standard softmax transformer on each (token-dim attention — the
+    regime XCA never exercises), with a 2x FFN carrying real ibn roles.
+    """
+    layers: List[Layer] = []
+    ibn_id = [3000]
+
+    def mv2(prefix: str, res: int, c_in: int, c_out: int, stride: int):
+        ce = mv2_expand * c_in
+        r_out = res // stride
+        layers.append(Layer(f"{prefix}.pw1", PWCONV, b=batch, k=ce,
+                            c=c_in, ox=res * res))
+        layers.append(Layer(f"{prefix}.act", ACT, b=batch, c=ce,
+                            ox=res * res))
+        layers.append(Layer(f"{prefix}.dw", DWCONV, b=batch, c=ce,
+                            ox=r_out, oy=r_out, fx=3, fy=3))
+        layers.append(Layer(f"{prefix}.pw2", PWCONV, b=batch, k=c_out,
+                            c=ce, ox=r_out * r_out))
+        if stride == 1 and c_in == c_out:
+            layers.append(Layer(f"{prefix}.res", ELEMWISE, b=batch,
+                                c=c_out, ox=r_out * r_out))
+        return r_out
+
+    def mvit(prefix: str, res: int, c: int, d: int, depth: int):
+        n_pix = res * res
+        n_tok = n_pix // (patch * patch)
+        dh = max(1, d // heads)
+        b_attn = batch * patch * patch * heads
+        layers.append(Layer(f"{prefix}.conv3", CONV, b=batch, k=c, c=c,
+                            ox=res, oy=res, fx=3, fy=3))
+        layers.append(Layer(f"{prefix}.conv1", PWCONV, b=batch, k=d, c=c,
+                            ox=n_pix))
+        for bi in range(depth):
+            p = f"{prefix}.t{bi}"
+            i = ibn_id[0]
+            ibn_id[0] += 1
+            layers.append(Layer(f"{p}.ln1", NORM, b=batch, c=d, ox=n_pix))
+            layers.append(Layer(f"{p}.qkv", PWCONV, b=batch, k=3 * d, c=d,
+                                ox=n_pix))
+            # scores [N, N] = q [N, dh] @ k^T [dh, N] per head and patch
+            layers.append(Layer(f"{p}.qk", MATMUL, b=b_attn, k=n_tok,
+                                c=dh, ox=n_tok))
+            layers.append(Layer(f"{p}.sm", SOFTMAX, b=b_attn, c=n_tok,
+                                ox=n_tok))
+            layers.append(Layer(f"{p}.av", MATMUL, b=b_attn, k=dh,
+                                c=n_tok, ox=n_tok))
+            layers.append(Layer(f"{p}.proj", PWCONV, b=batch, k=d, c=d,
+                                ox=n_pix))
+            layers.append(Layer(f"{p}.res1", ELEMWISE, b=batch, c=d,
+                                ox=n_pix))
+            layers.append(Layer(f"{p}.ln2", NORM, b=batch, c=d, ox=n_pix))
+            layers.append(Layer(f"{p}.fc1", PWCONV, b=batch,
+                                k=ffn_ratio * d, c=d, ox=n_pix,
+                                ibn_role="expand", ibn_id=i))
+            layers.append(Layer(f"{p}.act", ACT, b=batch,
+                                c=ffn_ratio * d, ox=n_pix,
+                                ibn_role="act", ibn_id=i))
+            layers.append(Layer(f"{p}.fc2", PWCONV, b=batch, k=d,
+                                c=ffn_ratio * d, ox=n_pix,
+                                ibn_role="project", ibn_id=i))
+            layers.append(Layer(f"{p}.res2", ELEMWISE, b=batch, c=d,
+                                ox=n_pix))
+        layers.append(Layer(f"{prefix}.ln", NORM, b=batch, c=d, ox=n_pix))
+        layers.append(Layer(f"{prefix}.fold", PWCONV, b=batch, k=c, c=d,
+                            ox=n_pix))
+        # concat(input, folded) -> 3x3 fusion conv back to c channels
+        layers.append(Layer(f"{prefix}.fuse", CONV, b=batch, k=c,
+                            c=2 * c, ox=res, oy=res, fx=3, fy=3))
+
+    res = img_size // 2
+    layers.append(Layer("stem", CONV, b=batch, k=16, c=3, ox=res, oy=res,
+                        fx=3, fy=3))
+    res = mv2("s0.mv0", res, 16, mv2_out[0], 1)
+    res = mv2("s1.mv0", res, mv2_out[0], mv2_out[1], 2)
+    res = mv2("s1.mv1", res, mv2_out[1], mv2_out[1], 1)
+    res = mv2("s1.mv2", res, mv2_out[1], mv2_out[1], 1)
+    for si, (c, d, depth) in enumerate(zip(mv2_out[2:], vit_dims,
+                                           vit_depths)):
+        c_prev = mv2_out[2 + si - 1] if si else mv2_out[1]
+        res = mv2(f"s{2 + si}.mv0", res, c_prev, c, 2)
+        mvit(f"s{2 + si}.vit", res, c, d, depth)
+    layers.append(Layer("head.conv", PWCONV, b=batch, k=4 * mv2_out[-1],
+                        c=mv2_out[-1], ox=res * res))
+    layers.append(Layer("head.fc", PWCONV, b=batch,
+                        k=num_classes, c=4 * mv2_out[-1]))
+    return layers
+
+
+def mobilevit_serving_workload(batch: int = 4) -> List[Layer]:
+    """MobileViT-S at a batch>1 serving shape (pixel extents scale by
+    the batch while the odd channel/dim extents — 96/144/160/240 — keep
+    the imperfect-factor tiler honest), the second DSE serving point
+    next to ``edgenext_serving_workload``."""
+    return mobilevit_workload(batch=batch)
+
+
 def total_macs(layers: List[Layer]) -> int:
     return sum(l.macs for l in layers)
 

@@ -17,14 +17,15 @@ CLI: ``PYTHONPATH=src python -m repro.search --workload edgenext-s``.
 from repro.search.auto import Schedule, auto_schedule, evaluate_schedule
 from repro.search.cache import (cached_search, load_schedule, save_schedule,
                                 schedule_key)
-from repro.search.dse import (DsePoint, edp_best, hw_variants, pareto_front,
-                              sweep)
+from repro.search.dse import (DsePoint, edp_best, hw_variants,
+                              memory_variants, pareto_front, sweep,
+                              sweep_memory)
 
 __all__ = [
     "Schedule", "auto_schedule", "evaluate_schedule", "cached_search",
     "load_schedule", "save_schedule", "schedule_key", "DsePoint",
-    "edp_best", "hw_variants", "pareto_front", "sweep", "WORKLOADS",
-    "get_workload",
+    "edp_best", "hw_variants", "memory_variants", "pareto_front", "sweep",
+    "sweep_memory", "WORKLOADS", "get_workload",
 ]
 
 
@@ -33,13 +34,17 @@ def get_workload(name: str):
     from repro.configs.edgenext_s import CONFIG, reduced_edgenext
     from repro.core.workload import (edgenext_serving_workload,
                                      edgenext_workload,
-                                     efficientvit_workload, vit_workload)
+                                     efficientvit_workload,
+                                     mobilevit_serving_workload,
+                                     mobilevit_workload, vit_workload)
     builders = {
         "edgenext-s": lambda: edgenext_workload(CONFIG),
         "edgenext-s-b4": lambda: edgenext_serving_workload(batch=4),
         "edgenext-reduced": lambda: edgenext_workload(reduced_edgenext()),
         "vit-tiny": lambda: vit_workload(),
         "efficientvit-b0": lambda: efficientvit_workload(),
+        "mobilevit-s": lambda: mobilevit_workload(),
+        "mobilevit-s-b4": lambda: mobilevit_serving_workload(batch=4),
     }
     if name not in builders:
         raise KeyError(f"unknown workload {name!r}; "
@@ -48,4 +53,4 @@ def get_workload(name: str):
 
 
 WORKLOADS = ("edgenext-s", "edgenext-s-b4", "edgenext-reduced", "vit-tiny",
-             "efficientvit-b0")
+             "efficientvit-b0", "mobilevit-s", "mobilevit-s-b4")

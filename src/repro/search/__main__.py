@@ -3,9 +3,14 @@
     PYTHONPATH=src python -m repro.search --workload edgenext-s \
         --out schedule.json
     PYTHONPATH=src python -m repro.search --workload vit-tiny --dse
+    PYTHONPATH=src python -m repro.search --workload edgenext-s \
+        --mem sram:1mb --mem rf:16kb            # resize hierarchy levels
+    PYTHONPATH=src python -m repro.search --workload edgenext-s \
+        --dse-mem rf sram                        # L1-vs-L2 sizing sweep
 
 Exit code 0 on success; the schedule artifact is reusable through
-``repro.search.cache`` (content-addressed by workload + HWSpec).
+``repro.search.cache`` (content-addressed by workload + HWSpec, memory
+hierarchy included).
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ import sys
 from pathlib import Path
 
 from repro.core.costmodel import HWSpec
+from repro.core.memory import apply_mem_overrides
 from repro.core.schedule import CONFIG_STACK, evaluate_stack
 from repro.search import (WORKLOADS, auto_schedule, cached_search, dse,
                           get_workload, save_schedule)
@@ -32,7 +38,11 @@ def _build_hw(args: argparse.Namespace) -> HWSpec:
         over["act_budget_bytes"] = int(args.sram_kb * 1024 * 3 / 8)
     if args.rf_kb is not None:
         over["output_rf_bytes"] = args.rf_kb * 1024
-    return dataclasses.replace(HWSpec(), **over)
+    hw = dataclasses.replace(HWSpec(), **over)
+    if args.mem:
+        hw = dataclasses.replace(
+            hw, hierarchy=apply_mem_overrides(hw.hierarchy, args.mem))
+    return hw
 
 
 def main(argv=None) -> int:
@@ -44,6 +54,16 @@ def main(argv=None) -> int:
                     help="content-addressed schedule cache directory")
     ap.add_argument("--dse", action="store_true",
                     help="sweep HWSpec variants and print the Pareto front")
+    ap.add_argument("--mem", action="append", default=[],
+                    metavar="NAME:BYTES[:PJ]",
+                    help="resize / reprice one memory-hierarchy level "
+                         "(repeatable), e.g. --mem sram:256kb or "
+                         "--mem dram:0:80; partitions scale with the "
+                         "level")
+    ap.add_argument("--dse-mem", nargs="+", default=None, metavar="LEVEL",
+                    help="sweep the named hierarchy levels over a "
+                         "0.5x/1x/2x sizing grid and print the "
+                         "(latency, energy) Pareto front")
     ap.add_argument("--golden", type=Path, default=None,
                     help="write the small golden-schedule snapshot "
                          "(groups + tiles + EDP) asserted by "
@@ -57,6 +77,37 @@ def main(argv=None) -> int:
 
     layers = get_workload(args.workload)
     hw = _build_hw(args)
+
+    if args.dse_mem:
+        sizings = {}
+        for name in args.dse_mem:
+            try:
+                lvl = hw.hierarchy.level(name)
+            except KeyError as e:
+                ap.error(str(e.args[0]))
+            if not lvl.bounded:
+                ap.error(f"--dse-mem {name}: the unbounded backing "
+                         f"store has no capacity to sweep; choose from "
+                         f"{', '.join(l.name for l in hw.hierarchy.on_chip)}")
+            sizings[name] = (lvl.bytes // 2, lvl.bytes, lvl.bytes * 2)
+        pts = dse.sweep_memory(layers, hw, sizings=sizings,
+                               workload=args.workload)
+        front = dse.pareto_front(pts)
+        best = dse.edp_best(pts)
+        base_pt = next(p for p in pts
+                       if all(hw.hierarchy.level(n).bytes == b
+                              for n, b in p.mem))
+        print(f"# hierarchy DSE {args.workload}: {len(pts)} sizings, "
+              f"{len(front)} on the Pareto front")
+        print("sizing,latency_ms,energy_mj,edp,edp_vs_base,on_front")
+        on_front = {p.label for p in front}
+        for p in sorted(pts, key=lambda p: p.edp):
+            print(f"{p.label},{p.latency_s*1e3:.4g},{p.energy_j*1e3:.4g},"
+                  f"{p.edp:.4g},{p.edp/base_pt.edp:.4f},"
+                  f"{int(p.label in on_front)}")
+        print(f"# EDP-best: {best.label} (edp={best.edp:.4g}, "
+              f"{best.edp/base_pt.edp:.4f}x the base spec)")
+        return 0
 
     if args.dse:
         pts = dse.sweep(layers, dse.hw_variants(hw),
@@ -88,12 +139,18 @@ def main(argv=None) -> int:
     else:
         sched = auto_schedule(layers, hw, workload=args.workload)
 
-    print(f"# auto-schedule {args.workload} on {hw.rows}x{hw.cols} PEs")
+    print(f"# auto-schedule {args.workload} on {hw.rows}x{hw.cols} PEs, "
+          f"hierarchy {'/'.join(hw.hierarchy.names)}")
     print(f"groups={len(sched.groups)} spill_edges={len(sched.edges)} "
           f"fused_nonlinear={len(sched.fused_nonlinear)} "
           f"lowered_kernels={len(sched.lowered)}")
     for k, v in sched.cost.items():
         print(f"cost.{k},{v:.6g}")
+    from repro.core.schedule import level_breakdown
+    from repro.search import evaluate_schedule
+    for name, d in level_breakdown(
+            evaluate_schedule(layers, sched, hw)).items():
+        print(f"level.{name},{d['bytes']:.6g}B,{d['energy_pj']:.6g}pJ")
     names = [n for n, _ in CONFIG_STACK]
     for r, name in zip(evaluate_stack(layers, hw), names):
         print(f"hand.{name}.edp,{r.edp:.6g}")

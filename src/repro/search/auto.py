@@ -31,11 +31,14 @@ from repro.search import mapper, partition, tiler
 
 @dataclasses.dataclass
 class Schedule:
-    """A complete searched schedule (JSON-serializable)."""
+    """A complete searched schedule (JSON-serializable).  ``hw`` embeds
+    the full memory hierarchy (nested ``levels`` list), and
+    ``placements`` records, per MAC layer, the memory level each
+    operand's stationary tile was placed at by the mapper."""
     version: int
     workload: str
     key: str                                       # content hash
-    hw: Dict[str, float]
+    hw: Dict[str, object]
     mappings: Dict[str, Tuple[str, str]]           # MAC layer -> (row, col)
     orders: Dict[str, Tuple[str, ...]]             # MAC layer -> loop order
     fused_nonlinear: Tuple[str, ...]
@@ -51,6 +54,9 @@ class Schedule:
     # "legacy" | "pow2") — part of the content hash so ablation
     # schedules are never replayed as full-enumeration results
     tile_mode: str = "full"
+    # MAC layer -> {operand: memory-level name} loop placements
+    placements: Dict[str, Dict[str, str]] = dataclasses.field(
+        default_factory=dict)
 
     def spill_edge_list(self):
         from repro.core.fusion import SpillEdge
@@ -131,11 +137,14 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                 "weight_rereads": g.tile.weight_rereads,
                 "sram_traffic": g.tile.sram_traffic,
                 "ragged_x": g.tile.ragged_x,
-                "ragged_c": g.tile.ragged_c}
+                "ragged_c": g.tile.ragged_c,
+                "level": g.tile.level}
 
     # 4. temporal orders (pixelwise-constrained where a channel-stat
-    #    nonlinear fused into this layer's writeback)
+    #    nonlinear fused into this layer's writeback) + per-operand
+    #    stationarity placements over the memory hierarchy
     orders: Dict[str, Tuple[str, ...]] = {}
+    placements: Dict[str, Dict[str, str]] = {}
     fused_set = set(part.fused_nonlinear)
     for g in part.groups:
         sl = layers[g.start:g.end]
@@ -158,37 +167,48 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                 t = mapper.best_temporal(l, hw, tile_mode=tile_mode)
             if t is not None:
                 orders[l.name] = t.order
+                placements[l.name] = dict(t.placement)
 
-    # 5. Pallas launch parameters
+    # 5. Pallas launch parameters (a group parked at a deeper residence
+    #    level lowers against that level's capacity, not the RF's)
     lowered = {
         " + ".join(lk.layer_names): {"kernel": lk.kernel, **lk.params,
                                      "ragged": dict(lk.ragged)}
         for lk in lower_mod.lower_schedule(
             list(layers), part.groups, tiles,
-            local_buffer=hw.output_rf_bytes)}
+            local_buffer=hw.output_rf_bytes,
+            level_budgets={name: cap for name, cap, _ in
+                           partition.residence_budgets(hw)})}
 
+    hw_doc = dataclasses.asdict(hw)
+    hw_doc["hierarchy"] = hw.hierarchy.to_json()
     sched = Schedule(
         version=cache_mod.SEARCH_VERSION, workload=workload,
         key=cache_mod.schedule_key(layers, hw, tile_mode),
-        hw={f.name: getattr(hw, f.name)
-            for f in dataclasses.fields(hw)},
+        hw=hw_doc,
         mappings=mappings, orders=orders,
         fused_nonlinear=tuple(part.fused_nonlinear),
         groups=tuple(group_names),
         edges=tuple((e.producer, e.consumer, e.nbytes)
                     for e in part.edges),
         tiles=tiles, lowered=lowered, cost={},
-        fixed_wiring=not reconfigurable, tile_mode=tile_mode)
+        fixed_wiring=not reconfigurable, tile_mode=tile_mode,
+        placements=placements)
 
     # 6. headline numbers under the shared accounting, plus the
     #    tile-aware (ragged-edge) variant used to compare candidate
     #    spaces under identical accounting
     nc = evaluate_schedule(layers, sched, hw)
     nct = evaluate_schedule(layers, sched, hw, tile_aware=True)
+    # the tile-aware stream traffic lands at the hierarchy's stream
+    # level ("sram" on the paper design, "l1" on a 4-level one) — read
+    # it by level name, not by the legacy key
+    from repro.core.costmodel import _stream_level
+    stream = _stream_level(hw).name
     sched.cost = {"latency_s": nc.latency_s, "energy_j": nc.energy_j,
                   "edp": nc.edp, "fps": nc.fps,
                   "dram_bytes": float(nc.dram_bytes()),
                   "energy_tiled_j": nct.energy_j, "edp_tiled": nct.edp,
                   "sram_tiled_bytes": float(sum(
-                      lc.sram_bytes for lc in nct.layers))}
+                      lc.traffic.get(stream, 0) for lc in nct.layers))}
     return sched

@@ -21,7 +21,9 @@ from repro.core.workload import Layer
 # schedules are never replayed against a newer engine
 # v2: divisor + imperfect-factor tile enumeration, ragged-edge cost
 #     accounting, tiled cost rows, ragged-aware lowering
-SEARCH_VERSION = 2
+# v3: N-level MemoryHierarchy in HWSpec (hashed via the nested level
+#     list), per-operand loop placements, per-level group residence
+SEARCH_VERSION = 3
 
 
 def _canon_layers(layers: List[Layer]) -> List[dict]:
@@ -70,7 +72,9 @@ def load_schedule(path: Path) -> Optional["object"]:
             edges=tuple(tuple(e) for e in raw["edges"]),
             tiles=raw["tiles"], lowered=raw["lowered"], cost=raw["cost"],
             fixed_wiring=raw.get("fixed_wiring", False),
-            tile_mode=raw.get("tile_mode", "full"))
+            tile_mode=raw.get("tile_mode", "full"),
+            placements={k: dict(v) for k, v in
+                        raw.get("placements", {}).items()})
     except (KeyError, TypeError):
         return None
 

@@ -1,16 +1,25 @@
 """Hardware design-space exploration: Pareto sweep over HWSpec variants.
 
-For each candidate accelerator (PE array shape, SRAM / RF sizing) the
-full auto-scheduler runs and reports the workload's latency / energy /
-EDP — so every point on the front carries its *own* best schedule, not
-a schedule tuned for one reference design (the co-search ZigZag itself
-performs).
+For each candidate accelerator (PE array shape, memory-hierarchy level
+sizing) the full auto-scheduler runs and reports the workload's latency
+/ energy / EDP — so every point on the front carries its *own* best
+schedule, not a schedule tuned for one reference design (the co-search
+ZigZag itself performs).
+
+Two sweep axes:
+  ``hw_variants`` / ``sweep``   — the PE-shape x SRAM/RF grid (PR 1);
+  ``memory_variants`` / ``sweep_memory`` — per-level hierarchy sizing
+    (the L1-vs-L2 tradeoff): every named level sweeps its capacity with
+    the access energy scaling as sqrt(capacity) (longer bit/word
+    lines), act partitions keeping their share.  The fixed paper spec
+    is one grid point, so the Pareto front directly answers whether a
+    different on-chip split beats it.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 from repro.core.costmodel import HWSpec
 from repro.core.workload import Layer
@@ -27,9 +36,13 @@ class DsePoint:
     energy_j: float
     edp: float
     schedule: Schedule
+    # hierarchy-sizing sweeps: the swept (level, bytes) assignment
+    mem: Tuple[Tuple[str, int], ...] = ()
 
     @property
     def label(self) -> str:
+        if self.mem:
+            return "-".join(f"{k}{v // 1024}k" for k, v in self.mem)
         return (f"{self.rows}x{self.cols}pe-{self.sram_kb}kSRAM-"
                 f"{self.rf_kb}kRF")
 
@@ -77,6 +90,60 @@ def sweep(layers: List[Layer], variants: Optional[Iterable[HWSpec]] = None,
             latency_s=sched.cost["latency_s"],
             energy_j=sched.cost["energy_j"], edp=sched.cost["edp"],
             schedule=sched))
+    return pts
+
+
+def memory_variants(base: Optional[HWSpec] = None, *,
+                    sizings: Mapping[str, Sequence[int]]) -> List[HWSpec]:
+    """The hierarchy-sizing grid: the cross product of per-level
+    capacities in ``sizings`` (level name -> byte options).  Each resized
+    level scales its pJ/byte by sqrt(capacity ratio) — the same
+    longer-bit/word-line model the PE-shape sweep applies to the SRAM —
+    and ``MemoryHierarchy.resized`` keeps partition shares (the act 3/8
+    of the SRAM, the input/output split of the RF).  Level capacities of
+    the base spec reproduce the base point exactly.
+    """
+    base = base or HWSpec()
+    names = [n for n in base.hierarchy.names if n in sizings]
+    unknown = set(sizings) - set(base.hierarchy.names)
+    if unknown:
+        raise KeyError(f"no such memory level(s): {sorted(unknown)}; "
+                       f"hierarchy has {base.hierarchy.names}")
+    for n in names:
+        if not base.hierarchy.level(n).bounded:
+            raise ValueError(
+                f"cannot sweep the unbounded backing store {n!r} — "
+                f"sweep a bounded on-chip level instead")
+    out: List[HWSpec] = []
+    for combo in itertools.product(*(sizings[n] for n in names)):
+        h = base.hierarchy
+        for name, nbytes in zip(names, combo):
+            lvl = h.level(name)
+            scale = (nbytes / lvl.bytes) ** 0.5 if lvl.bounded else 1.0
+            h = h.resized(name, bytes=nbytes,
+                          pj_per_byte=lvl.pj_per_byte * scale)
+        out.append(dataclasses.replace(base, hierarchy=h))
+    return out
+
+
+def sweep_memory(layers: List[Layer], base: Optional[HWSpec] = None, *,
+                 sizings: Mapping[str, Sequence[int]],
+                 workload: str = "custom") -> List[DsePoint]:
+    """Run the auto-scheduler over a hierarchy-sizing grid; points are
+    labeled by their per-level byte assignment (e.g. ``rf32k-sram256k``).
+    """
+    base = base or HWSpec()
+    pts: List[DsePoint] = []
+    for hw in memory_variants(base, sizings=sizings):
+        sched = auto_schedule(layers, hw, workload=workload)
+        mem = tuple((l.name, l.bytes) for l in hw.hierarchy.levels
+                    if l.name in sizings)
+        pts.append(DsePoint(
+            rows=hw.rows, cols=hw.cols, sram_kb=hw.sram_bytes // 1024,
+            rf_kb=hw.output_rf_bytes // 1024,
+            latency_s=sched.cost["latency_s"],
+            energy_j=sched.cost["energy_j"], edp=sched.cost["edp"],
+            schedule=sched, mem=mem))
     return pts
 
 

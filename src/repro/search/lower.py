@@ -131,14 +131,19 @@ def lower_attention(qk: Layer, *, tile_x: int,
 
 
 def lower_schedule(layers: Sequence[Layer], groups, tiles: Dict[str, dict],
-                   *, local_buffer: int) -> List[LoweredKernel]:
+                   *, local_buffer: int,
+                   level_budgets: Optional[Dict[str, int]] = None
+                   ) -> List[LoweredKernel]:
     """Emit kernel launch parameters for every lowerable construct in a
     partitioned schedule.
 
     ``groups`` is the partition's group list (objects with start/end and
     fused_nonlinear); ``tiles`` maps group-head layer names to tile
     summaries (only used for pixel-tile hints; missing entries fall back
-    to kernel defaults).
+    to kernel defaults).  ``level_budgets`` maps residence-level names to
+    their capacities, so a group the tiler parked at a deeper level (the
+    tile summary's ``level``) re-derives any missing tile against *that*
+    buffer, not the innermost RF.
     """
     out: List[LoweredKernel] = []
     for g in groups:
@@ -151,6 +156,8 @@ def lower_schedule(layers: Sequence[Layer], groups, tiles: Dict[str, dict],
         rec_tc = tinfo.get("tile_c") or None
         tx = int(rec_tx or 64)
         tc = int(rec_tc or 128)
+        buffer = (level_budgets or {}).get(tinfo.get("level"),
+                                           local_buffer)
         # MAC->MAC pixel-aligned pair: score @ softmax @ value chains are
         # the flash-attention kernel; anything else is the fused-IBN one
         sm = next((l for l in sl if l.op == SOFTMAX), None)
@@ -159,7 +166,7 @@ def lower_schedule(layers: Sequence[Layer], groups, tiles: Dict[str, dict],
                 out.append(lower_attention(macs[0], tile_x=tx, seq=sm.c))
             else:
                 out.append(lower_ibn(macs[0], macs[1],
-                                     local_buffer=local_buffer,
+                                     local_buffer=buffer,
                                      tile_x=rec_tx, tile_c=rec_tc))
             continue
         if len(macs) == 1:

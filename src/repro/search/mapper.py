@@ -9,10 +9,18 @@ pixelwise temporal re-ordering; this module opens the full space:
              ``core.dataflow.cycles_generic``.
   temporal : permutations of the three macro loops (X = pixels,
              K = output channels, C = reduction), tiled against the
-             input-mem / output-RF budgets of ``costmodel.HWSpec``.
-             Loop order decides which tensor stays resident and which
-             re-streams from SRAM — and whether the pixelwise (C2)
-             nonlinear fusion is legal at writeback.
+             PE-coupled buffer budgets of the ``MemoryHierarchy``
+             carried by ``costmodel.HWSpec``.  Loop order decides which
+             tensor stays resident and which re-streams — and whether
+             the pixelwise (C2) nonlinear fusion is legal at writeback.
+
+Each temporal choice additionally *places* every operand's stationary
+tile at a memory level (the innermost level that serves it and holds
+the tile) and charges the per-round fill/drain traffic to the level
+that transfer actually crosses, so candidates are ranked by per-level
+energy — on a deeper hierarchy, a loop order that keeps its reuse in a
+cheap L1 beats one that re-streams from an expensive L2, which the old
+single-SRAM aggregate could not see.
 
 ``best_mapping``/``best_temporal`` are what the auto-scheduler
 (`repro.search.auto`) calls per layer; nothing here is EdgeNeXt-specific.
@@ -21,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 from repro.core import dataflow
 from repro.core.costmodel import HWSpec
@@ -102,8 +110,13 @@ class TemporalChoice:
     tile_x: int
     tile_k: int
     tile_c: int
-    sram_bytes: int                # refined traffic incl. forced re-reads
+    sram_bytes: int                # aggregate streamed bytes (all levels)
     pixelwise: bool                # channel-stat fusion legal at writeback
+    # operand -> memory-level name where its stationary tile resides
+    placement: Tuple[Tuple[str, str], ...] = ()
+    # level name -> fill/drain bytes crossing that level's port
+    level_bytes: Tuple[Tuple[str, int], ...] = ()
+    energy_pj: float = 0.0         # per-level traffic x pJ/byte (rank key)
 
 
 def macro_extents(layer: Layer) -> Tuple[int, int, int]:
@@ -114,21 +127,64 @@ def macro_extents(layer: Layer) -> Tuple[int, int, int]:
     return n_x, layer.k, layer.c * layer.fx * layer.fy
 
 
-def _traffic(layer: Layer, order: Tuple[str, ...], trips: dict) -> int:
-    """SRAM bytes moved under ``order``.  A tensor re-streams once per
-    iteration of a loop that does not index it and sits outside one of
-    its loops; the innermost loop reuses whatever is resident.
+def _traffic(layer: Layer, order: Tuple[str, ...],
+             trips: dict) -> Dict[str, int]:
+    """Per-operand bytes moved under ``order``.  A tensor re-streams
+    once per iteration of a loop that does not index it and sits outside
+    one of its loops; the innermost loop reuses whatever is resident.
 
     Same ragged-edge accounting as ``core.tiling``: each re-stream moves
     the tensor's exact byte volume (a ragged tile is smaller) while the
     trip counts are ceil-rounds, so the ragged round pays the full
     per-round re-stream of the *other* tensors."""
     inner = order[-1]
-    w = layer.weight_bytes * (1 if inner == "x" else trips["x"])
-    x = layer.input_bytes * (1 if inner == "k" else trips["k"])
-    # partial outputs spill + reload per extra reduction round
-    o = layer.output_bytes * (1 if inner == "c" else 2 * trips["c"] - 1)
-    return w + x + o
+    return {
+        "weight": layer.weight_bytes * (1 if inner == "x" else trips["x"]),
+        "input": layer.input_bytes * (1 if inner == "k" else trips["k"]),
+        # partial outputs spill + reload per extra reduction round
+        "output": layer.output_bytes * (1 if inner == "c"
+                                        else 2 * trips["c"] - 1),
+    }
+
+
+def _tile_bytes(layer: Layer, tx: int, tk: int, tc: int
+                ) -> Dict[str, int]:
+    """Resident-tile footprint per operand: the (tile_x, tile_c) operand
+    block, the (tile_k, tile_c) weight block, and the (tile_x, tile_k)
+    32-bit psum block."""
+    bytes_per = max(1, layer.bits // 8)
+    return {"input": tx * tc * bytes_per,
+            "weight": tk * tc * bytes_per,
+            "output": 4 * tx * tk}
+
+
+def place_loops(layer: Layer, hw: HWSpec, tx: int, tk: int, tc: int,
+                per_operand: Dict[str, int]
+                ) -> Tuple[Dict[str, str], Dict[str, int], float]:
+    """Place each operand's stationarity at a memory level and charge
+    its fill/drain traffic to the level that transfer crosses.
+
+    Placement: the innermost level that serves the operand and holds its
+    resident tile (``MemoryHierarchy.stationary_level``).  Traffic: a
+    tile resident in the PE-coupled buffers refills from the next
+    serving level up; an operand too large for them streams past the
+    array straight from its stationary level
+    (``MemoryHierarchy.fill_level``).  Returns (placement, per-level
+    bytes, energy) — energy is the mapper's rank key.
+    """
+    tiles = _tile_bytes(layer, tx, tk, tc)
+    h = hw.hierarchy
+    placement: Dict[str, str] = {}
+    level_bytes: Dict[str, int] = {}
+    energy = 0.0
+    for operand, nbytes in per_operand.items():
+        placement[operand] = h.stationary_level(
+            operand, tiles[operand]).name
+        fill = h.fill_level(operand, tiles[operand])
+        if nbytes:
+            level_bytes[fill.name] = level_bytes.get(fill.name, 0) + nbytes
+            energy += nbytes * fill.pj_per_byte
+    return placement, level_bytes, energy
 
 
 def _pixelwise_ok(order: Tuple[str, ...], trips: dict) -> bool:
@@ -146,45 +202,59 @@ def enumerate_temporal(layer: Layer, hw: HWSpec,
                        tile_mode: str = "full") -> Iterator[TemporalChoice]:
     """Loop orders x budget-driven tile sizes for one MAC layer.
 
-    Tiles are bounded by the HW buffers: the output RF holds the
-    (tile_x, tile_k) 32-bit psum block; the input memory holds the
-    (tile_x, tile_c) operand block.  tile_x candidates come from the
-    shared divisor + imperfect-factor enumeration (``core.tiling``);
-    the pivots are the largest x-tiles keeping the full K extent in the
-    RF and the full reduction extent in the input memory.  Trip counts
-    are ragged-aware ceil-rounds over the same ``Tiling`` model the
-    group tiler charges.
+    Tiles are bounded by the innermost (PE-coupled) hierarchy level: its
+    output partition holds the (tile_x, tile_k) 32-bit psum block; its
+    input partition holds the (tile_x, tile_c) operand block.  tile_x
+    candidates come from the shared divisor + imperfect-factor
+    enumeration (``core.tiling``); the pivots are the largest x-tiles
+    keeping the full K extent in the RF and the full reduction extent in
+    the input memory.  Trip counts are ragged-aware ceil-rounds over the
+    same ``Tiling`` model the group tiler charges.  Every candidate
+    carries its loop placement (operand stationarity level) and the
+    per-level fill/drain traffic it implies.
     """
     n_x, n_k, n_c = macro_extents(layer)
     bytes_per = max(1, layer.bits // 8)
-    pivots = (hw.output_rf_bytes // (4 * n_k),
-              hw.input_mem_bytes // (bytes_per * n_c))
+    inner = hw.hierarchy.innermost
+    out_buf = inner.serve_capacity("output")
+    in_buf = inner.serve_capacity("input")
+    pivots = (out_buf // (4 * n_k), in_buf // (bytes_per * n_c))
     for tx in tile_candidates(n_x, extra=pivots, mode=tile_mode):
-        tk = min(n_k, hw.output_rf_bytes // (4 * tx))
-        tc = min(n_c, hw.input_mem_bytes // (bytes_per * tx))
+        tk = min(n_k, out_buf // (4 * tx))
+        tc = min(n_c, in_buf // (bytes_per * tx))
         if tk < 1 or tc < 1:
             continue
         trips = {"x": Tiling(n_x, tx).rounds, "k": Tiling(n_k, tk).rounds,
                  "c": Tiling(n_c, tc).rounds}
         for order in itertools.permutations(MACRO_LOOPS):
+            per_operand = _traffic(layer, order, trips)
+            placement, level_bytes, energy = place_loops(
+                layer, hw, tx, tk, tc, per_operand)
             yield TemporalChoice(
                 order=order, tile_x=tx, tile_k=tk, tile_c=tc,
-                sram_bytes=_traffic(layer, order, trips),
-                pixelwise=_pixelwise_ok(order, trips))
+                sram_bytes=sum(per_operand.values()),
+                pixelwise=_pixelwise_ok(order, trips),
+                placement=tuple(sorted(placement.items())),
+                level_bytes=tuple(sorted(level_bytes.items())),
+                energy_pj=energy)
 
 
 def best_temporal(layer: Layer, hw: HWSpec, *,
                   require_pixelwise: bool = False,
                   tile_mode: str = "full"
                   ) -> Optional[TemporalChoice]:
-    """Min-traffic temporal schedule; optionally restricted to orders
-    where the C2 pixelwise fusion of trailing channel-stat nonlinears is
+    """Min-energy temporal schedule — per-level traffic weighted by each
+    level's pJ/byte, so deeper hierarchies rank candidates by where the
+    re-streams actually land (on the default 3-level design every stream
+    crosses the single SRAM, making this ordering identical to the old
+    min-aggregate-traffic rule).  Optionally restricted to orders where
+    the C2 pixelwise fusion of trailing channel-stat nonlinears is
     legal.  Returns None only if no tile fits the buffers at all."""
     best: Optional[TemporalChoice] = None
     for t in enumerate_temporal(layer, hw, tile_mode=tile_mode):
         if require_pixelwise and not t.pixelwise:
             continue
-        if best is None or (t.sram_bytes, t.order, t.tile_x) < \
-                (best.sram_bytes, best.order, best.tile_x):
+        if best is None or (t.energy_pj, t.order, t.tile_x) < \
+                (best.energy_pj, best.order, best.tile_x):
             best = t
     return best

@@ -60,6 +60,15 @@ def _static_pj_per_cycle(hw: HWSpec) -> float:
     return hw.static_mw * 1e-3 / hw.clock_hz * 1e12
 
 
+def _stream_pj(hw: HWSpec) -> float:
+    """pJ/byte of the level operand streaming crosses — the same level
+    ``costmodel._mac_layer_cost`` charges, so the DP optimizes the exact
+    cost surface the evaluation reports (on the default 3-level design
+    this is the SRAM; on a 4-level design it is the L1)."""
+    from repro.core.costmodel import _stream_level
+    return _stream_level(hw).pj_per_byte
+
+
 def _mac_base_pj(l: Layer, cyc: int, hw: HWSpec, *,
                  include_sram: bool = True) -> float:
     """Energy of one MAC layer outside fusion decisions (mirrors
@@ -69,7 +78,7 @@ def _mac_base_pj(l: Layer, cyc: int, hw: HWSpec, *,
         l.weight_bytes * hw.e_dram_byte + cyc * _static_pj_per_cycle(hw)
     if include_sram:
         pj += (l.input_bytes + l.output_bytes + l.weight_bytes) \
-            * hw.e_sram_byte
+            * _stream_pj(hw)
     return pj
 
 
@@ -77,14 +86,14 @@ def _unfused_nonlinear_pj(l: Layer, hw: HWSpec) -> float:
     passes = 2 if l.op in (NORM, SOFTMAX) else 1
     stream = 2 * l.input_bytes
     stall = passes * _ceil(stream, hw.dram_bus_bytes_per_cycle)
-    return (passes * stream * hw.e_sram_byte
+    return (passes * stream * _stream_pj(hw)
             + l.input_bytes * hw.e_rf_byte
             + stall * _static_pj_per_cycle(hw))
 
 
 def _group_cost(layers: Sequence[Layer], j: int, i: int,
                 cycles_by_name: Dict[str, int], hw: HWSpec,
-                local_buffer: int,
+                budgets: Sequence[tiler.LevelBudget],
                 tile_mode: str = "full") -> Optional[Tuple[float, Group]]:
     """Cost + metadata of fusing layers[j:i] into one group, or None if
     the slice is not a feasible group."""
@@ -105,16 +114,18 @@ def _group_cost(layers: Sequence[Layer], j: int, i: int,
 
     tile: Optional[tiler.GroupTile] = None
     if len(macs) > 1:
-        tile = tiler.tile_group(sl, local_buffer=local_buffer,
+        stream_pj = _stream_pj(hw)
+        tile = tiler.tile_group(sl, budgets=budgets, stream_pj=stream_pj,
                                 mode=tile_mode)
         if tile is None:
             return None
-        # depth-first group: SRAM traffic comes from the tiler (input
-        # re-reads per channel round + weight re-streams per x slab);
-        # interior tensors move only through the local buffer (RF-class)
-        interior = sum(l.output_bytes for l in macs[:-1])
-        pj += tile.sram_traffic * hw.e_sram_byte \
-            + 2 * interior * hw.e_rf_byte
+        # depth-first group: spill-level traffic comes from the tiler
+        # (input re-reads per channel round + weight re-streams per x
+        # slab); interior tensors move only through the residence level
+        # the tiler chose (write + read per byte at that level's pJ)
+        interior = tiler.interior_bytes(sl)
+        level_pj = next(p for n, _, p in budgets if n == tile.level)
+        pj += tile.sram_traffic * stream_pj + 2 * interior * level_pj
         for l in macs:
             pj += _mac_base_pj(l, cycles_by_name[l.name], hw,
                                include_sram=False)
@@ -149,6 +160,16 @@ def _boundary_edge(layers: Sequence[Layer], groups: List[Group],
                      is_ibn=is_ibn)
 
 
+def residence_budgets(hw: HWSpec) -> Tuple[tiler.LevelBudget, ...]:
+    """The per-level budget vector for depth-first group intermediates:
+    every hierarchy level strictly inside the spill level, with the
+    capacity its activation-serving partition grants (the paper's RF
+    level is hard-partitioned — interiors live in the 24 kB output RF,
+    not the input mem)."""
+    return tuple((l.name, l.serve_capacity("output"), l.pj_per_byte)
+                 for l in hw.hierarchy.local_levels())
+
+
 def partition_chain(layers: Sequence[Layer],
                     cycles_by_name: Dict[str, int],
                     hw: Optional[HWSpec] = None, *,
@@ -162,12 +183,19 @@ def partition_chain(layers: Sequence[Layer],
     chosen spatial mapping (the partitioner is mapping-agnostic).
     ``tile_mode`` selects the group-tile candidate space ("full" =
     divisors + imperfect factors, "pow2" = the ablation baseline).
+    ``act_budget`` defaults to the hierarchy's spill-level act
+    partition; ``local_buffer`` (single-level override, kept for tests /
+    ablations) replaces the hierarchy-derived residence budget vector.
     """
     hw = hw or HWSpec()
     if act_budget is None:
         act_budget = hw.act_budget_bytes
     if local_buffer is None:
-        local_buffer = hw.output_rf_bytes
+        budgets = residence_budgets(hw)
+    else:
+        budgets = ((hw.hierarchy.innermost.name, local_buffer,
+                    hw.e_rf_byte),)
+    spill_pj = hw.hierarchy.outermost.pj_per_byte
     n = len(layers)
     INF = float("inf")
     dp: List[float] = [INF] * (n + 1)
@@ -178,7 +206,7 @@ def partition_chain(layers: Sequence[Layer],
         for j in range(max(0, i - max_span), i):
             if dp[j] == INF:
                 continue
-            gc = _group_cost(layers, j, i, cycles_by_name, hw, local_buffer,
+            gc = _group_cost(layers, j, i, cycles_by_name, hw, budgets,
                              tile_mode=tile_mode)
             if gc is None:
                 continue
@@ -188,7 +216,7 @@ def partition_chain(layers: Sequence[Layer],
             if j > 0:
                 nbytes = layers[j - 1].output_bytes
                 if nbytes > act_budget:
-                    pj += 2 * nbytes * hw.e_dram_byte
+                    pj += 2 * nbytes * spill_pj
             if dp[j] + pj < dp[i]:
                 dp[i] = dp[j] + pj
                 choice[i] = (j, pj, grp)

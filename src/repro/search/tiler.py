@@ -25,6 +25,15 @@ Tiling model (the paper's Fig 4 depth-first schedule):
 
 Infeasible tilings (tile cannot fit the buffer) are *skipped*, never
 returned — a group with no feasible tile is simply not fusible.
+
+With an N-level ``MemoryHierarchy`` the group's intermediates may live
+at any level strictly inside the spill level (``budgets`` — a per-level
+budget vector instead of the single local buffer): a deeper level fits
+larger slabs (fewer weight re-streams from the act SRAM) but charges
+its own pJ/byte on every intermediate byte.  ``tile_group`` searches
+tile sizes *per candidate level* and returns the energy-minimizing
+(level, tile) pair; with the default 3-level hierarchy the only
+candidate is the RF, reproducing the seed behavior exactly.
 """
 from __future__ import annotations
 
@@ -36,13 +45,17 @@ from repro.core.fusion import FusedTile
 from repro.core.tiling import Tiling, budget_tile_candidates
 from repro.core.workload import MAC_OPS, NORM, SOFTMAX, Layer
 
+# one budget entry: (level name, capacity bytes, pJ/byte)
+LevelBudget = Tuple[str, int, float]
+
 
 def _candidates_x(n: int, widest: int, bytes_per: int,
-                  local_buffer: int, mode: str = "full") -> List[int]:
+                  local_buffer, mode: str = "full") -> List[int]:
     """Tile_x candidates: all divisors of ``n`` plus powers of two plus
-    the two budget pivots — the largest x-tile that keeps the widest
-    intermediate fully resident, and the largest that fits a single
-    channel.  ``mode="pow2"`` is the power-of-two ablation baseline."""
+    the budget pivots of every level in the budget vector — the largest
+    x-tile that keeps the widest intermediate fully resident, and the
+    largest that fits a single channel.  ``mode="pow2"`` is the
+    power-of-two ablation baseline."""
     return budget_tile_candidates(n, widest, bytes_per, local_buffer,
                                   mode=mode)
 
@@ -58,6 +71,7 @@ class GroupTile:
     sram_traffic: int            # total SRAM bytes for the group
     ragged_x: int = 0            # ragged last x slab (0 = perfect)
     ragged_c: int = 0            # ragged last c slab (0 = perfect)
+    level: str = "rf"            # residence level of the intermediates
 
 
 def optimize_tile(expand: Layer, project: Layer, *, local_buffer: int,
@@ -98,25 +112,18 @@ def chain_compatible(a: Layer, b: Layer) -> bool:
     return pa == pb and a.k == b.c
 
 
-def tile_group(group: Sequence[Layer], *, local_buffer: int,
-               mode: str = "full") -> Optional[GroupTile]:
-    """Feasibility + tiling for a fusion-group layer slice.
-
-    The slice holds >= 1 MAC layer plus interleaved nonlinears.  A single
-    MAC layer has no interior tensor (trivially feasible).  Multi-MAC
-    slices run depth-first; returns None when the chain is incompatible
-    or no tile fits the buffer.
-    """
+def interior_bytes(group: Sequence[Layer]) -> int:
+    """Bytes of the inter-MAC intermediate tensors — the data that lives
+    only at the group's residence level (each byte is written once and
+    read once there)."""
     macs = [l for l in group if l.op in MAC_OPS]
-    if not macs:
-        return None
-    if len(macs) == 1:
-        return GroupTile(tile_x=0, tile_c=0, buffer_bytes=0,
-                         weight_rereads=1, sram_traffic=0)
-    for a, b in zip(macs, macs[1:]):
-        if not chain_compatible(a, b):
-            return None
+    return sum(l.output_bytes for l in macs[:-1])
 
+
+def _tile_group_at(group: Sequence[Layer], capacity: int,
+                   mode: str) -> Optional[GroupTile]:
+    """Best tiling of a multi-MAC slice at one residence capacity."""
+    macs = [l for l in group if l.op in MAC_OPS]
     # does a channel-stat nonlinear sit between two MAC layers?
     stats_interior = False
     seen_mac = 0
@@ -127,7 +134,7 @@ def tile_group(group: Sequence[Layer], *, local_buffer: int,
             stats_interior = True
 
     if len(macs) == 2:
-        ft = optimize_tile(macs[0], macs[1], local_buffer=local_buffer,
+        ft = optimize_tile(macs[0], macs[1], local_buffer=capacity,
                            full_width=stats_interior, mode=mode)
         if ft is None:
             return None
@@ -148,10 +155,10 @@ def tile_group(group: Sequence[Layer], *, local_buffer: int,
         if len(widths) > 1 else widths[0]
     w_bytes = sum(l.weight_bytes for l in macs)
     best: Optional[GroupTile] = None
-    for tx in _candidates_x(n, peak_width, bytes_per, local_buffer,
+    for tx in _candidates_x(n, peak_width, bytes_per, capacity,
                             mode=mode):
         buf = tx * peak_width * bytes_per
-        if buf > local_buffer:
+        if buf > capacity:
             continue
         tiling_x = Tiling(n, tx)
         # weights re-stream in full each x round (ragged round included);
@@ -165,4 +172,53 @@ def tile_group(group: Sequence[Layer], *, local_buffer: int,
                          ragged_x=tiling_x.ragged)
         if best is None or cand.sram_traffic < best.sram_traffic:
             best = cand
+    return best
+
+
+def tile_group(group: Sequence[Layer], *,
+               local_buffer: Optional[int] = None,
+               mode: str = "full",
+               budgets: Optional[Sequence[LevelBudget]] = None,
+               stream_pj: float = 0.0) -> Optional[GroupTile]:
+    """Feasibility + tiling for a fusion-group layer slice.
+
+    The slice holds >= 1 MAC layer plus interleaved nonlinears.  A single
+    MAC layer has no interior tensor (trivially feasible).  Multi-MAC
+    slices run depth-first; returns None when the chain is incompatible
+    or no tile fits any budget.
+
+    ``budgets`` is the per-level budget vector — candidate residence
+    levels for the interior tensors as (name, capacity, pJ/byte),
+    innermost first.  Per level the tile search minimizes SRAM traffic;
+    across levels the choice minimizes energy: group streaming at
+    ``stream_pj`` plus the interior write+read at the residence level's
+    pJ/byte.  ``local_buffer`` is the single-level shorthand
+    (equivalent to ``budgets=[("rf", local_buffer, 0.0)]``).
+    """
+    if budgets is None:
+        if local_buffer is None:
+            raise TypeError("tile_group needs local_buffer or budgets")
+        budgets = (("rf", local_buffer, 0.0),)
+    macs = [l for l in group if l.op in MAC_OPS]
+    if not macs:
+        return None
+    if len(macs) == 1:
+        return GroupTile(tile_x=0, tile_c=0, buffer_bytes=0,
+                         weight_rereads=1, sram_traffic=0,
+                         level=budgets[0][0] if budgets else "rf")
+    for a, b in zip(macs, macs[1:]):
+        if not chain_compatible(a, b):
+            return None
+
+    interior = interior_bytes(group)
+    best: Optional[GroupTile] = None
+    best_pj = 0.0
+    for name, capacity, level_pj in budgets:
+        t = _tile_group_at(group, capacity, mode)
+        if t is None:
+            continue
+        pj = t.sram_traffic * stream_pj + 2 * interior * level_pj
+        if best is None or pj < best_pj:
+            best = dataclasses.replace(t, level=name)
+            best_pj = pj
     return best

@@ -1,0 +1,356 @@
+"""core.memory — N-level hierarchy API + back-compat equivalence pins.
+
+The load-bearing claim of the HWSpec redesign: the default 3-level
+``paper_hierarchy`` reproduces the seed's scalar-field cost model
+BIT-EXACTLY (latency / energy / EDP pinned to the seed constants, the
+1.39 TOPS/W calibration untouched), while per-level traffic rows sum to
+the old rf/sram/dram aggregates.  Plus: validation, JSON round-trip,
+``--mem`` override parsing, and a 4-level hierarchy running end to end
+through the auto-scheduler.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs.edgenext_s import CONFIG, reduced_edgenext
+from repro.core import memory
+from repro.core.costmodel import HWSpec, cost_network, energy_buckets
+from repro.core.memory import (MemoryHierarchy, MemoryLevel,
+                               apply_mem_overrides, paper_hierarchy,
+                               parse_mem, parse_size,
+                               split_sram_hierarchy)
+from repro.core.workload import edgenext_workload
+from repro.search import auto_schedule, evaluate_schedule, mapper
+
+WL = edgenext_workload(CONFIG)
+HW = HWSpec()
+
+# seed cost-model outputs on EdgeNeXt-S, pinned before the hierarchy
+# redesign (PR 2 HEAD) — the default hierarchy must reproduce them
+# bit-exactly
+SEED_BASELINE = (0.08840852, 0.003875622031999999, 0.0003426380079285126)
+SEED_FULL = (0.05324152, 0.0022935513783999984, 0.0001221121615841111)
+
+
+# ---------------------------------------------------------------------------
+# back-compat equivalence: default hierarchy == seed scalars
+# ---------------------------------------------------------------------------
+
+
+def test_default_hierarchy_matches_seed_scalars():
+    h = HW.hierarchy
+    assert h.names == ("rf", "sram", "dram")
+    assert HW.input_mem_bytes == 8 * 1024
+    assert HW.output_rf_bytes == 24 * 1024
+    assert HW.sram_bytes == 512 * 1024
+    assert HW.act_budget_bytes == 192 * 1024
+    assert HW.dram_bus_bytes_per_cycle == 16
+    assert (HW.e_rf_byte, HW.e_sram_byte, HW.e_dram_byte) == \
+        (0.15, 1.2, 100.0)
+
+
+def test_peak_calibration_unchanged():
+    """The pinned 1.39 TOPS/W calibration must survive the redesign."""
+    assert abs(HW.peak_tops_per_w - 1.39) < 0.05
+    assert HW.peak_tops_per_w == \
+        HWSpec(hierarchy=paper_hierarchy()).peak_tops_per_w
+
+
+@pytest.mark.parametrize("kw,pinned", [
+    (dict(reconfigurable=False, fuse_nonlinear=False, fuse_ibn=False),
+     SEED_BASELINE),
+    (dict(), SEED_FULL),
+])
+def test_cost_network_bit_exact_vs_seed(kw, pinned):
+    for hw in (HW, HWSpec(hierarchy=paper_hierarchy())):
+        c = cost_network(WL, hw, **kw)
+        assert (c.latency_s, c.energy_j, c.edp) == pinned
+
+
+def test_per_level_traffic_sums_to_old_aggregates():
+    """Every layer's per-level rows must sum to the seed's rf/sram/dram
+    aggregates (nothing dropped, nothing double-counted), and the energy
+    buckets must be exactly hierarchy-derived."""
+    c = cost_network(WL, HW, reconfigurable=False, fuse_nonlinear=False,
+                     fuse_ibn=False)
+    assert energy_buckets(HW) == ("compute", "rf", "sram", "dram")
+    for lc in c.layers:
+        assert set(lc.traffic) <= set(HW.hierarchy.names)
+        assert sum(lc.traffic.values()) == \
+            lc.rf_bytes + lc.sram_bytes + lc.dram_bytes
+        en = lc.energy_pj(HW)
+        assert set(en) == set(energy_buckets(HW))
+        assert en["rf"] == lc.rf_bytes * HW.e_rf_byte
+        assert en["sram"] == lc.sram_bytes * HW.e_sram_byte
+        assert en["dram"] == lc.dram_bytes * HW.e_dram_byte
+    net = c.energy_pj()
+    assert set(net) == set(energy_buckets(HW)) | {"static"}
+    tot = c.traffic_bytes()
+    assert tot["sram"] == sum(lc.sram_bytes for lc in c.layers)
+    assert tot["dram"] == c.dram_bytes()
+
+
+def test_mapper_level_bytes_sum_to_aggregate():
+    """Temporal candidates: the per-level fill/drain split must cover the
+    legacy aggregate exactly, and every placement names a real level."""
+    pw1 = next(l for l in WL if l.ibn_role == "expand")
+    n = 0
+    for t in mapper.enumerate_temporal(pw1, HW):
+        assert sum(b for _, b in t.level_bytes) == t.sram_bytes
+        assert {lvl for _, lvl in t.placement} <= set(HW.hierarchy.names)
+        assert t.energy_pj > 0
+        n += 1
+    assert n > 0
+
+
+def test_legacy_replace_paths_still_work():
+    """The dse / CLI override paths: scalar kwargs apply onto the
+    hierarchy through dataclasses.replace."""
+    hw = dataclasses.replace(HW, rows=32, sram_bytes=256 * 1024,
+                             act_budget_bytes=96 * 1024,
+                             output_rf_bytes=48 * 1024,
+                             e_sram_byte=0.9)
+    assert (hw.rows, hw.sram_bytes, hw.act_budget_bytes) == \
+        (32, 256 * 1024, 96 * 1024)
+    assert hw.output_rf_bytes == 48 * 1024
+    assert hw.input_mem_bytes == 8 * 1024          # untouched partition
+    assert hw.hierarchy.innermost.bytes == (8 + 48) * 1024
+    assert hw.e_sram_byte == 0.9
+    # hierarchy passed whole survives replace of non-memory fields
+    hw2 = dataclasses.replace(hw, cols=8)
+    assert hw2.hierarchy == hw.hierarchy
+
+
+# ---------------------------------------------------------------------------
+# MemoryLevel / MemoryHierarchy validation + JSON round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_level_validation():
+    with pytest.raises(ValueError):
+        MemoryLevel("", 1024, 1.0)
+    with pytest.raises(ValueError):
+        MemoryLevel("x", -1, 1.0)
+    with pytest.raises(ValueError):
+        MemoryLevel("x", 1024, 1.0, serves=())
+    with pytest.raises(ValueError):
+        MemoryLevel("x", 1024, 1.0, serves=("bogus",))
+    with pytest.raises(ValueError):
+        MemoryLevel("x", 1024, 1.0, partitions=(("a", 600), ("b", 600)))
+    with pytest.raises(ValueError):
+        MemoryLevel("x", 1024, 1.0, partitions=(("a", 1), ("a", 2)))
+    for reserved in ("compute", "static"):         # energy-bucket keys
+        with pytest.raises(ValueError, match="reserved"):
+            MemoryLevel(reserved, 1024, 1.0)
+
+
+def test_hierarchy_validation():
+    rf = MemoryLevel("rf", 1024, 0.1, serves=("input", "output"))
+    sram = MemoryLevel("s", 4096, 1.0)
+    dram = MemoryLevel("dram", 0, 100.0)
+    with pytest.raises(ValueError):                # too few levels: the
+        MemoryHierarchy((rf, dram))                # cost-model roles are
+    with pytest.raises(ValueError):                # positional (>= 3)
+        MemoryHierarchy((rf,))
+    with pytest.raises(ValueError):
+        MemoryHierarchy((rf, dataclasses.replace(rf, name="rf"), dram))
+    with pytest.raises(ValueError):                # unbounded inner level
+        MemoryHierarchy((dataclasses.replace(dram, name="x"), sram, dram))
+    with pytest.raises(ValueError):                # shrinking outward
+        MemoryHierarchy((rf, MemoryLevel("s", 512, 1.0), dram))
+    with pytest.raises(ValueError):                # backing store partial
+        MemoryHierarchy((rf, sram, MemoryLevel("d", 0, 9.0,
+                                               serves=("weight",))))
+    h = MemoryHierarchy((rf, sram, dram))
+    assert h.innermost.name == "rf" and h.outermost.name == "dram"
+    assert h.spill_level.name == "s"
+    assert h.local_levels() == (rf,)
+
+
+def test_serve_capacity_and_partitions():
+    h = paper_hierarchy()
+    rf = h.innermost
+    assert rf.serve_capacity("input") == 8 * 1024
+    assert rf.serve_capacity("output") == 24 * 1024
+    assert rf.serve_capacity("weight") == 0        # not served at the RF
+    assert h.level("sram").serve_capacity("weight") == 512 * 1024
+    assert h.level("dram").capacity == memory.UNBOUNDED
+    assert h.act_budget_bytes == 192 * 1024
+    assert h.stationary_level("input", 4096).name == "rf"
+    assert h.stationary_level("input", 64 * 1024).name == "sram"
+    assert h.fill_level("input", 4096).name == "sram"
+    assert h.fill_level("weight", 4096).name == "sram"
+    assert h.fill_level("weight", 600 * 1024).name == "dram"
+
+
+def test_hierarchy_json_roundtrip():
+    for h in (paper_hierarchy(), split_sram_hierarchy(),
+              paper_hierarchy(sram_bytes=256 * 1024, e_dram_byte=80.0)):
+        doc = h.to_json()
+        assert MemoryHierarchy.from_json(doc) == h
+        assert MemoryHierarchy.from_json(json.dumps(doc)) == h
+
+
+def test_resized_scales_partitions():
+    h = paper_hierarchy().resized("sram", bytes=1024 * 1024)
+    assert h.level("sram").bytes == 1024 * 1024
+    assert h.act_budget_bytes == 384 * 1024        # keeps the 3/8 share
+    h2 = h.resized("sram", pj_per_byte=2.0)
+    assert h2.level("sram").pj_per_byte == 2.0
+    assert h2.act_budget_bytes == 384 * 1024
+
+
+# ---------------------------------------------------------------------------
+# --mem override parsing
+# ---------------------------------------------------------------------------
+
+
+def test_parse_size_and_mem():
+    assert parse_size("24576") == 24576
+    assert parse_size("256kb") == 256 * 1024
+    assert parse_size("1mb") == 1024 * 1024
+    assert parse_mem("sram:256kb") == ("sram", 256 * 1024, None)
+    assert parse_mem("dram:0:80") == ("dram", 0, 80.0)
+    with pytest.raises(ValueError):
+        parse_mem("sram")
+    with pytest.raises(ValueError):
+        parse_mem(":64kb")
+
+
+def test_apply_mem_overrides():
+    h = apply_mem_overrides(paper_hierarchy(),
+                            ["sram:1mb", "rf:64kb", "dram:0:80"])
+    assert h.level("sram").bytes == 1024 * 1024
+    assert h.level("rf").bytes == 64 * 1024
+    assert h.level("rf").partition("output") == 48 * 1024  # 3/4 share kept
+    assert h.level("dram").pj_per_byte == 80.0
+    with pytest.raises(KeyError, match="rf, sram, dram"):
+        apply_mem_overrides(paper_hierarchy(), ["l3:1mb"])
+    # impossible requests error instead of silently no-oping
+    with pytest.raises(ValueError, match="unbounded"):
+        apply_mem_overrides(paper_hierarchy(), ["dram:1mb"])
+    with pytest.raises(ValueError, match="> 0"):
+        apply_mem_overrides(paper_hierarchy(), ["sram:0"])
+    with pytest.raises(ValueError, match="nothing to change"):
+        apply_mem_overrides(paper_hierarchy(), ["dram:0"])
+
+
+# ---------------------------------------------------------------------------
+# N-level hierarchies end to end
+# ---------------------------------------------------------------------------
+
+
+def test_four_level_hierarchy_schedules_end_to_end():
+    """A 4-level rf/l1/l2/dram hierarchy must run through the full
+    auto-scheduler: per-level energy buckets appear, fusion-group
+    intermediates may claim the L1, and the searched EDP stays finite
+    and sane."""
+    hw4 = HWSpec(hierarchy=split_sram_hierarchy())
+    assert energy_buckets(hw4) == ("compute", "rf", "l1", "l2", "dram")
+    wl = edgenext_workload(reduced_edgenext())
+    sched = auto_schedule(wl, hw4, workload="edgenext-reduced-4lvl")
+    assert 0 < sched.cost["edp"] < float("inf")
+    levels = {t["level"] for t in sched.tiles.values()}
+    assert levels <= {"rf", "l1"}
+    nc = evaluate_schedule(wl, sched, hw4)
+    en = nc.energy_pj()
+    assert set(en) == {"compute", "rf", "l1", "l2", "dram", "static"}
+    for name, d in sched.placements.items():
+        assert set(d) == {"input", "weight", "output"}
+        assert set(d.values()) <= {"rf", "l1", "l2", "dram"}
+    # the tiled stream-traffic metric must follow the stream level (l1
+    # here), not the legacy "sram" key
+    assert sched.cost["sram_tiled_bytes"] > 0
+    # and the DP prices streaming at the same level the evaluation
+    # charges, so the searched EDP is the reported EDP's optimum
+    from repro.core.costmodel import _stream_level
+    from repro.search.partition import _stream_pj
+    assert _stream_pj(hw4) == _stream_level(hw4).pj_per_byte == 0.6
+
+
+@pytest.mark.slow
+def test_four_level_l1_extends_fusion_reach():
+    """An L1 big enough for slabs the RF cannot hold must let the tiler
+    claim it — the residence level of at least one EdgeNeXt group moves
+    off the RF when the RF is tiny.  (Full-size EdgeNeXt-S search: slow
+    lane; the reduced-arch 4-level case runs in the default lane.)"""
+    small_rf = paper_hierarchy(output_rf_bytes=2 * 1024)
+    h4 = split_sram_hierarchy(small_rf, l1_bytes=64 * 1024)
+    sched = auto_schedule(WL, HWSpec(hierarchy=h4),
+                          workload="edgenext-s-smallrf")
+    assert "l1" in {t["level"] for t in sched.tiles.values()}
+
+
+def test_level_breakdown_rows_follow_hierarchy():
+    from repro.core.schedule import level_breakdown
+    c3 = cost_network(WL, HW)
+    lv = level_breakdown(c3)
+    assert set(lv) == {"rf", "sram", "dram"}
+    en = c3.energy_pj()
+    for name, d in lv.items():
+        assert d["energy_pj"] == en[name]
+    hw4 = HWSpec(hierarchy=split_sram_hierarchy())
+    assert set(level_breakdown(cost_network(WL, hw4))) == \
+        {"rf", "l1", "l2", "dram"}
+
+
+def test_fusion_tile_accepts_budget_vector():
+    """core.fusion.optimize_tile takes the per-level budget vector: the
+    vector's pivots widen the candidate set while feasibility binds at
+    the largest level — a (24k,) vector reproduces the scalar result."""
+    from repro.core.fusion import optimize_tile
+    from repro.core.workload import ibn_groups
+    exp, _a, proj = ibn_groups(WL)[0]
+    scalar = optimize_tile(exp, proj, local_buffer=24 * 1024)
+    vec1 = optimize_tile(exp, proj, local_buffer=(24 * 1024,))
+    assert vec1 == scalar
+    vec2 = optimize_tile(exp, proj,
+                         local_buffer=(24 * 1024, 64 * 1024))
+    assert vec2.buffer_bytes <= 64 * 1024
+    assert vec2.sram_traffic <= scalar.sram_traffic
+
+
+def test_hierarchy_hashes_into_schedule_key():
+    """Two different sizings must produce different content hashes (a
+    schedule searched for one hierarchy is never replayed for another).
+    """
+    from repro.search import schedule_key
+    wl = edgenext_workload(reduced_edgenext())
+    k1 = schedule_key(wl, HW)
+    k2 = schedule_key(wl, HWSpec(sram_bytes=256 * 1024))
+    k3 = schedule_key(wl, HWSpec(hierarchy=split_sram_hierarchy()))
+    assert len({k1, k2, k3}) == 3
+
+
+def test_lowering_honors_residence_level():
+    """A fusion group parked at a deeper level (e.g. the L1) must lower
+    its kernel blocks against that level's capacity — not re-derive a
+    tile for the smaller RF the schedule did not choose."""
+    from repro.core.workload import PWCONV, Layer
+    from repro.search import lower
+
+    exp = Layer("e", PWCONV, k=304, c=160, ox=197)
+    proj = Layer("p", PWCONV, k=160, c=304, ox=197)
+
+    class G:
+        start, end, fused_nonlinear = 0, 2, ()
+
+    tiles = {"e": {"level": "l1"}}      # residence chosen, tile omitted
+    small = lower.lower_schedule([exp, proj], [G()], tiles,
+                                 local_buffer=2 * 1024)
+    big = lower.lower_schedule([exp, proj], [G()], tiles,
+                               local_buffer=2 * 1024,
+                               level_budgets={"l1": 64 * 1024})
+    assert big[0].params["block_m"] * big[0].params["block_f"] > \
+        small[0].params["block_m"] * small[0].params["block_f"]
+
+
+def test_memory_sweep_rejects_unbounded_level():
+    """Sweeping the backing store's 0-byte sentinel would silently
+    produce identical grid points — it must raise instead."""
+    from repro.search import memory_variants
+    with pytest.raises(ValueError, match="unbounded"):
+        memory_variants(HW, sizings={"dram": (0,)})
+    with pytest.raises(KeyError):
+        memory_variants(HW, sizings={"l3": (1024,)})

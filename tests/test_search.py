@@ -26,10 +26,11 @@ from repro.core.fusion import spill_edges
 from repro.core.schedule import evaluate_stack
 from repro.core.workload import (DWCONV, MAC_OPS, Layer, edgenext_workload,
                                  efficientvit_workload, ibn_groups,
-                                 total_macs, vit_workload)
+                                 mobilevit_workload, total_macs,
+                                 vit_workload)
 from repro.search import (auto_schedule, cached_search, dse, edp_best,
                           evaluate_schedule, hw_variants, load_schedule,
-                          pareto_front, save_schedule, sweep)
+                          pareto_front, save_schedule, sweep, sweep_memory)
 from repro.search import lower, mapper, partition, tiler
 
 WL = edgenext_workload(CONFIG)
@@ -132,6 +133,7 @@ def test_fixed_wiring_costed_with_column_void_penalty():
 @pytest.mark.parametrize("name,layers", [
     ("vit-tiny", vit_workload()),
     ("efficientvit-b0", efficientvit_workload()),
+    ("mobilevit-s", mobilevit_workload()),
 ])
 def test_auto_generalizes(name, layers):
     assert total_macs(layers) > 0
@@ -139,6 +141,23 @@ def test_auto_generalizes(name, layers):
     hand = evaluate_stack(layers, HW)
     assert sched.cost["edp"] <= hand[-1].edp * (1 + 1e-9), name
     assert len(sched.groups) > 0 and sched.cost["latency_s"] > 0
+
+
+def test_mobilevit_workload_registered():
+    """The second hybrid-ViT graph: published MobileViT-S scale (~2
+    GMACs at 256x256), batch-4 serving shape scaling, FFN ibn triples
+    for the fusion analyses, both shapes in the CLI registry."""
+    from repro.search import WORKLOADS, get_workload
+    wl = get_workload("mobilevit-s")
+    g = total_macs(wl) / 1e9
+    assert 1.5 < g < 2.5, g
+    assert len(ibn_groups(wl)) == sum((2, 4, 3))      # one per block
+    wl4 = get_workload("mobilevit-s-b4")
+    assert total_macs(wl4) == 4 * total_macs(wl)
+    assert {"mobilevit-s", "mobilevit-s-b4"} <= set(WORKLOADS)
+    sched = auto_schedule(wl4, HW, workload="mobilevit-s-b4")
+    assert sched.cost["edp"] <= \
+        evaluate_stack(wl4, HW)[-1].edp * (1 + 1e-9)
 
 
 @pytest.mark.parametrize("name,layers", [
@@ -342,6 +361,64 @@ def test_schedule_json_roundtrip(tmp_path):
     assert back.mappings == SCHED.mappings
     assert tuple(back.edges) == tuple(SCHED.edges)
     assert back.cost["edp"] == pytest.approx(SCHED.cost["edp"])
+    assert back.placements == SCHED.placements
+    assert back.hw["hierarchy"]["levels"][0]["name"] == "rf"
+
+
+def test_stale_v2_artifacts_rejected(tmp_path):
+    """A SEARCH_VERSION=2 cache entry must never be replayed as a v3
+    result: load_schedule refuses it and cached_search re-searches."""
+    from repro.search.cache import SEARCH_VERSION, schedule_key
+    assert SEARCH_VERSION == 3
+    wl = edgenext_workload(reduced_edgenext())
+    key = schedule_key(wl, HW)
+    path = tmp_path / f"edgenext-reduced-{key}.json"
+    save_schedule(SCHED, path)
+    doc = json.loads(path.read_text())
+    doc["version"] = 2                   # a stale v2 artifact at the
+    path.write_text(json.dumps(doc))     # exact v3 cache path
+    assert load_schedule(path) is None
+    sched = cached_search(wl, HW, workload="edgenext-reduced",
+                          cache_dir=tmp_path)
+    assert sched.version == 3
+    assert sched.workload == "edgenext-reduced"
+    # the refreshed artifact replaced the stale one
+    assert json.loads(path.read_text())["version"] == 3
+
+
+def test_schedule_places_every_mac_layer():
+    """Loop placements: every MAC layer carries an operand -> level map
+    over real hierarchy levels; on the paper design the input tile and
+    psum block sit in the PE-coupled RF and the weights stream from the
+    SRAM."""
+    for l in WL:
+        if l.op not in MAC_OPS:
+            continue
+        d = SCHED.placements[l.name]
+        assert set(d) == {"input", "weight", "output"}
+        assert set(d.values()) <= set(HW.hierarchy.names)
+    pw1 = next(l for l in WL if l.ibn_role == "expand")
+    assert SCHED.placements[pw1.name] == \
+        {"input": "rf", "output": "rf", "weight": "sram"}
+
+
+def test_memory_sweep_beats_fixed_paper_spec():
+    """The hierarchy-sizing DSE acceptance: on EdgeNeXt-S at least one
+    swept L1/L2 sizing lands on the Pareto front with lower EDP than the
+    fixed paper spec, and the paper sizing reproduces the paper EDP
+    exactly (it is a grid point)."""
+    kb = 1024
+    pts = sweep_memory(WL, HW, sizings={"rf": (16 * kb, 32 * kb),
+                                        "sram": (512 * kb, 1024 * kb)},
+                       workload="edgenext-s")
+    base = next(p for p in pts
+                if dict(p.mem) == {"rf": 32 * kb, "sram": 512 * kb})
+    assert base.edp == SCHED.cost["edp"]
+    front = pareto_front(pts)
+    assert any(p.edp < base.edp for p in front)
+    for p in front:
+        assert not any(dse.dominates(q, p) for q in pts), p.label
+    assert {len(p.mem) for p in pts} == {2}
 
 
 def test_cached_search_hits(tmp_path):
