@@ -1,11 +1,19 @@
 """Benchmark section for the ``repro.search`` auto-scheduler + DSE.
 
 Rows report (a) the searched schedule vs the hand-coded Fig 8 stack on
-EdgeNeXt-S, and (b) Pareto-front summaries of a small HWSpec sweep on
-the generalization workloads (plain ViT, EfficientViT-style).
+EdgeNeXt-S, (b) Pareto-front summaries of a small HWSpec sweep on the
+generalization workloads (plain ViT, EfficientViT-style), and (c) the
+``search.perf.*`` scheduler fast-path rows: wall-time speedup of the
+unique-layer-memoized, pruned search vs the dedup-off brute-force
+baseline measured in the same run (schedules bit-identical — the
+correctness half is pinned in tests/test_search_perf.py; the wall-clock
+half lives here in the BENCH trajectory where a noisy CI box cannot
+flake the test suite).
 """
 from __future__ import annotations
 
+import dataclasses
+import time
 from typing import List, Tuple
 
 from repro.configs.edgenext_s import CONFIG
@@ -13,9 +21,11 @@ from repro.core.costmodel import HWSpec
 from repro.core.schedule import evaluate_stack
 from repro.core.workload import (edgenext_serving_workload,
                                  edgenext_workload, efficientvit_workload,
-                                 mobilevit_workload, vit_workload)
+                                 fastvit_workload, mobilevit_workload,
+                                 vit_workload)
 from repro.search import (auto_schedule, dse, edp_best, hw_variants,
                           pareto_front, sweep, sweep_memory)
+from repro.search.perf import PerfRecorder
 
 Row = Tuple[str, float, str]
 
@@ -135,4 +145,82 @@ def bench_search() -> List[Row]:
             for p in front))
         rows.append((f"search.dse.{name}.front_valid", valid,
                      "1 = non-dominated"))
+    return rows
+
+
+def _best_of(fn, reps: int = 2) -> Tuple[float, object]:
+    """Min wall time over ``reps`` runs (the scheduler is deterministic;
+    the box is not), plus the last result."""
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_search_perf() -> List[Row]:
+    """The scheduler-speed section: ``search.perf.*``.
+
+    Each speedup row divides the dedup-off brute-force wall time by the
+    fast-path wall time for the *same problem in the same process*
+    (fresh memo per run — no cross-measurement warm state beyond
+    Python/lru warmup, which both sides share).  Bit-identical results
+    are asserted here too: a speedup of a wrong schedule is worthless.
+    Targets: >= 5x for full ``auto_schedule`` on MobileViT-S, >= 10x for
+    the ``--dse-mem``-shaped hierarchy sweep.
+    """
+    rows: List[Row] = []
+    hw = HWSpec()
+    auto_schedule(edgenext_workload(CONFIG), hw)      # shared warmup
+
+    for name, wl in (("mobilevit_s", mobilevit_workload()),
+                     ("fastvit_s", fastvit_workload()),
+                     ("edgenext_s", edgenext_workload(CONFIG))):
+        perf = PerfRecorder()
+        dt, fast = _best_of(lambda: auto_schedule(
+            wl, hw, workload=name, perf=perf))
+        dt_brute, brute = _best_of(lambda: auto_schedule(
+            wl, hw, workload=name, dedup=False), reps=1)
+        assert dataclasses.asdict(fast) == dataclasses.asdict(brute), \
+            f"dedup on/off schedules diverged on {name}"
+        rows.append((f"search.perf.auto.{name}.wall_ms", dt * 1e3,
+                     f"brute {dt_brute * 1e3:.1f} ms, bit-identical"))
+        rows.append((f"search.perf.auto.{name}.speedup", dt_brute / dt,
+                     "target >= 5x (dedup-off baseline, same run)"))
+        rows.append((f"search.perf.auto.{name}.memo_hit_rate",
+                     perf.hit_rate(),
+                     f"{len(wl)} layers"))
+    # FastViT rides the same hierarchy quality gate as the other graphs
+    wl_fv = fastvit_workload()
+    sched_fv = auto_schedule(wl_fv, hw, workload="fastvit-s")
+    rows.append(("search.perf.fastvit_s.edp_vs_hand",
+                 sched_fv.cost["edp"] / evaluate_stack(wl_fv, hw)[-1].edp,
+                 "<=1: search beats the hand stack on FastViT-S"))
+
+    # the --dse-mem shape: 3x3 rf x sram sizing grid, sweep-wide shared
+    # memo (incremental re-costing) vs 9 from-scratch brute searches
+    for name, wl in (("edgenext_s", edgenext_workload(CONFIG)),
+                     ("mobilevit_s", mobilevit_workload())):
+        dt, pts_f = _best_of(lambda: sweep_memory(
+            wl, hw, sizings=_MEM_SIZINGS, workload=name))
+        dt_brute, pts_b = _best_of(lambda: sweep_memory(
+            wl, hw, sizings=_MEM_SIZINGS, workload=name, dedup=False),
+            reps=1)
+        assert all(dataclasses.asdict(a.schedule)
+                   == dataclasses.asdict(b.schedule)
+                   for a, b in zip(pts_f, pts_b)), name
+        rows.append((f"search.perf.dse_mem.{name}.wall_ms", dt * 1e3,
+                     f"brute {dt_brute * 1e3:.0f} ms, 9 sizings, "
+                     f"bit-identical"))
+        rows.append((f"search.perf.dse_mem.{name}.speedup",
+                     dt_brute / dt,
+                     "target >= 10x (dedup-off baseline, same run)"))
+
+    # per-phase wall time of one fresh fast run (the measured hot path)
+    perf = PerfRecorder()
+    auto_schedule(mobilevit_workload(), hw, workload="mobilevit-s",
+                  perf=perf)
+    for rname, value, note in perf.rows("search.perf.mobilevit_s"):
+        rows.append((rname, value, note))
     return rows

@@ -27,7 +27,9 @@ bit-exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import functools
+import hashlib
+from typing import Dict, List, Mapping, Optional, Tuple
 
 from repro.core import dataflow
 from repro.core.memory import MemoryHierarchy, MemoryLevel, paper_hierarchy
@@ -160,6 +162,15 @@ class HWSpec:
     # -- derived -------------------------------------------------------
 
     @property
+    def signature(self) -> str:
+        """Canonical content hash of the full hardware description
+        (array shape, clock, energy constants, and the complete memory
+        hierarchy).  Two specs with equal signatures are interchangeable
+        to every scheduler decision — the unique-layer memo and the
+        schedule cache key (``search.cache``) key on it."""
+        return _hw_signature(self)
+
+    @property
     def peak_macs_per_s(self) -> float:
         return self.rows * self.cols * self.clock_hz   # 25.6 GMAC/s
 
@@ -175,6 +186,14 @@ class HWSpec:
         return ops_per_cycle / pj_per_cycle            # TOPS/W == ops/pJ
 
 
+@functools.lru_cache(maxsize=1024)
+def _hw_signature(hw: HWSpec) -> str:
+    blob = repr((hw.rows, hw.cols, hw.clock_hz, hw.bits, hw.e_mac,
+                 hw.static_mw, hw.hierarchy.signature))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+@functools.lru_cache(maxsize=1024)
 def energy_buckets(hw: HWSpec) -> Tuple[str, ...]:
     """The energy-bucket key set, derived from the hierarchy (single
     source of truth): compute plus one bucket per memory level."""
@@ -236,11 +255,19 @@ class NetworkCost:
         return 1.0 / self.latency_s
 
     def energy_pj(self) -> Dict[str, float]:
-        tot: Dict[str, float] = {b: 0.0 for b in energy_buckets(self.hw)}
+        # inlined per-layer accumulation (identical float sequence to
+        # merging LayerCost.energy_pj dicts — per-bucket sums run in
+        # layer order and zero terms add exactly nothing)
+        hw = self.hw
+        pj_by = {l.name: l.pj_per_byte for l in hw.hierarchy.levels}
+        tot: Dict[str, float] = {b: 0.0 for b in energy_buckets(hw)}
+        compute = 0.0
         for lc in self.layers:
-            for k, v in lc.energy_pj(self.hw).items():
-                tot[k] += v
-        tot["static"] = self.hw.static_mw * 1e-3 * self.latency_s * 1e12
+            compute += lc.layer.macs * hw.e_mac
+            for k, v in lc.traffic.items():
+                tot[k] += v * pj_by[k]
+        tot["compute"] = compute
+        tot["static"] = hw.static_mw * 1e-3 * self.latency_s * 1e12
         return tot
 
     def traffic_bytes(self) -> Dict[str, int]:
@@ -309,12 +336,20 @@ def _stream_level(hw: HWSpec) -> MemoryLevel:
 def _mac_layer_cost(layer: Layer, hw: HWSpec, mapping,
                     extra_dram: int = 0, *,
                     fixed_wiring: bool = False,
-                    sram_override: Optional[int] = None) -> LayerCost:
+                    sram_override: Optional[int] = None,
+                    placement: Optional[Mapping[str, str]] = None,
+                    cyc: Optional[int] = None) -> LayerCost:
+    # ``cyc``: the caller's already-derived cycle count for exactly this
+    # (mapping, fixed_wiring) — the auto-scheduler's spatial phase
+    # computed it once; re-deriving per evaluation is pure waste
     if isinstance(mapping, str):
-        cyc = dataflow.cycles(layer, mapping, hw.rows, hw.cols)
+        if cyc is None:
+            cyc = dataflow.cycles(layer, mapping, hw.rows, hw.cols)
     else:
-        cyc = dataflow.cycles_generic(layer, mapping, hw.rows, hw.cols,
-                                      fixed_wiring=fixed_wiring)
+        if cyc is None:
+            cyc = dataflow.cycles_generic(layer, mapping, hw.rows,
+                                          hw.cols,
+                                          fixed_wiring=fixed_wiring)
         mapping = "|".join(mapping).upper()        # display form
     # stream-level traffic: inputs read once (output-stationary RF holds
     # partials across the C-temporal loop), outputs written once, weights
@@ -333,7 +368,21 @@ def _mac_layer_cost(layer: Layer, hw: HWSpec, mapping,
     stall = max(0, _bus_cycles(dram, hw) - cyc)
     traffic: Dict[str, int] = {}
     _add(traffic, hw.hierarchy.innermost.name, rf)
-    _add(traffic, _stream_level(hw).name, sram)
+    if placement is not None and sram_override is None:
+        # placement-aware rows: charge each operand's streaming to the
+        # level its searched stationarity makes the transfer cross,
+        # instead of lumping everything at the default stream level.  On
+        # the paper's 3-level design every placed fill resolves to the
+        # SRAM, reproducing the lumped row bit-exactly; deeper
+        # hierarchies split the rows the way the mapper ranked them.
+        for operand, nbytes in (("input", layer.input_bytes),
+                                ("output", layer.output_bytes),
+                                ("weight", layer.weight_bytes)):
+            lvl = hw.hierarchy.fill_for_placement(
+                operand, placement.get(operand, _stream_level(hw).name))
+            _add(traffic, lvl.name, nbytes)
+    else:
+        _add(traffic, _stream_level(hw).name, sram)
     _add(traffic, hw.hierarchy.outermost.name, dram)
     return LayerCost(layer=layer, mapping=mapping, compute_cycles=cyc,
                      stall_cycles=stall, traffic=traffic)
@@ -444,6 +493,10 @@ def cost_network_scheduled(
     edges: List[object],
     fixed_wiring: bool = False,
     sram_overrides: Optional[Dict[str, int]] = None,
+    placements: Optional[Dict[str, Mapping[str, str]]] = None,
+    cycles: Optional[Dict[str, int]] = None,
+    dedup: bool = True,
+    cost_cache: Optional[Dict] = None,
 ) -> NetworkCost:
     """Cost the network under an explicit schedule (the ``repro.search``
     auto-scheduler's output) instead of the boolean config flags.
@@ -464,22 +517,73 @@ def cost_network_scheduled(
                         ragged-edge accounting of depth-first groups.
                         Omitted: the flat read-once/write-once estimate,
                         which is what the hand-coded Fig 8 stack uses.
+      placements      : per-MAC-layer {operand: memory-level name} loop
+                        placements (``Schedule.placements``) — per-level
+                        traffic rows charge each operand's streaming to
+                        the level its stationarity makes the transfer
+                        cross.  Omitted (and for layers without an
+                        entry, or whose group carries an override): the
+                        lumped default-stream-level row.
+      cycles          : per-MAC-layer cycle counts already derived for
+                        exactly these mappings under this wiring (the
+                        scheduler's spatial phase) — skips re-deriving
+                        them; only consulted for layers with an explicit
+                        mapping.
+      dedup           : repeated layer shapes cost identically under
+                        identical decisions — derive once per content
+                        key and restamp per repeat (``dedup=False`` is
+                        the brute-force equivalence mode: every layer
+                        derived directly).  ``cost_cache`` extends the
+                        sharing across calls (e.g. the plain and
+                        tile-aware evaluations of one schedule).
     """
     hw = hw or HWSpec()
     from repro.core.fusion import spill_bytes_per_layer
     spills = spill_bytes_per_layer(layers, edges)
     sram_overrides = sram_overrides or {}
+    placements = placements or {}
+    # repeated layer shapes cost identically under identical decisions —
+    # dedup the derivation by content key and restamp the record with
+    # each repeat's identity (traffic copied so the rows stay private);
+    # ``cost_cache`` shares the keyed results across sibling calls
+    seen: Optional[Dict[Tuple, LayerCost]] = None
+    if dedup:
+        seen = cost_cache if cost_cache is not None else {}
     out: List[LayerCost] = []
     for l in layers:
         if l.op in MAC_OPS:
             mapping = mappings.get(l.name)
+            cyc = cycles.get(l.name) if cycles is not None \
+                and mapping is not None else None
             if mapping is None:
                 mapping = dataflow.select_mapping(l, reconfigurable=False)
-            out.append(_mac_layer_cost(l, hw, mapping,
-                                       extra_dram=spills.get(l.name, 0),
-                                       fixed_wiring=fixed_wiring,
-                                       sram_override=sram_overrides.get(
-                                           l.name)))
+            pl = placements.get(l.name)
+            ov = sram_overrides.get(l.name)
+            ed = spills.get(l.name, 0)
+            if seen is None:
+                out.append(_mac_layer_cost(l, hw, mapping, extra_dram=ed,
+                                           fixed_wiring=fixed_wiring,
+                                           sram_override=ov,
+                                           placement=pl, cyc=cyc))
+                continue
+            # hw in the key: a cost_cache may outlive one call, and the
+            # rows depend on the bus width / hierarchy level names
+            key = (l.signature, hw.signature, mapping, ed, fixed_wiring,
+                   ov, cyc,
+                   None if pl is None else tuple(sorted(pl.items())))
+            prev = seen.get(key)
+            if prev is None:
+                lc = _mac_layer_cost(l, hw, mapping, extra_dram=ed,
+                                     fixed_wiring=fixed_wiring,
+                                     sram_override=ov, placement=pl,
+                                     cyc=cyc)
+                seen[key] = lc
+            else:
+                lc = LayerCost(layer=l, mapping=prev.mapping,
+                               compute_cycles=prev.compute_cycles,
+                               stall_cycles=prev.stall_cycles,
+                               traffic=dict(prev.traffic))
+            out.append(lc)
         else:
             out.append(_nonlinear_layer_cost(
                 l, hw, l.name in fused_nonlinear,

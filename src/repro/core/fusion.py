@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.tiling import Tiling, budget_tile_candidates
+from repro.core.tiling import budget_tile_candidates
 from repro.core.workload import MAC_OPS, Layer, ibn_groups
 
 
@@ -160,30 +160,32 @@ def optimize_tile(expand: Layer, project: Layer, *, local_buffer,
         local_buffer = max(local_buffer) if local_buffer else 0
 
     w_bytes = (c_in * c_mid + c_mid * c_out) * bits
-    best: Optional[FusedTile] = None
+    x_bytes = n * c_in * bits
+    out_writes = n * c_out * bits
+    # the loop is the auto-scheduler's per-span hot path: plain ceil-div
+    # arithmetic on the `Tiling` ragged model (rounds/ragged/traffic),
+    # picking the min-traffic candidate without building records
+    best_tx = best_tc = best_traffic = -1
     for tx in candidates_x:
-        tx = min(tx, n)
+        if tx > n:
+            tx = n
         tc = min(c_mid, local_buffer // max(1, tx * bits))
         if tc < 1 or tx * tc * bits > local_buffer:
             continue        # tile of T cannot fit the local buffer
         if full_width and tc < c_mid:
             continue        # stats need the whole channel extent resident
-        tiling_x = Tiling(n, tx)
-        tiling_c = Tiling(c_mid, tc)
         # x streams fully once per c round; W1/W2 stream fully once per
         # x round; the output's exact volume is written once.
-        x_reads = tiling_c.traffic(per_elem=0, per_round=n * c_in * bits)
-        w_reads = tiling_x.traffic(per_elem=0, per_round=w_bytes)
-        out_writes = n * c_out * bits
-        traffic = x_reads + w_reads + out_writes
-        cand = FusedTile(tile_x=tx, tile_c=tc, buffer_bytes=tx * tc * bits,
-                         weight_rereads=tiling_x.rounds,
-                         sram_traffic=traffic,
-                         ragged_x=tiling_x.ragged, ragged_c=tiling_c.ragged)
-        if best is None or cand.sram_traffic < best.sram_traffic:
-            best = cand
-    if best is None:
+        traffic = -(-c_mid // tc) * x_bytes + -(-n // tx) * w_bytes \
+            + out_writes
+        if best_traffic < 0 or traffic < best_traffic:
+            best_tx, best_tc, best_traffic = tx, tc, traffic
+    if best_traffic < 0:
         raise ValueError(
             f"no feasible IBN tile: local_buffer={local_buffer}B cannot "
             f"hold even a 1x1 tile of T ({bits}B/elem)")
-    return best
+    return FusedTile(tile_x=best_tx, tile_c=best_tc,
+                     buffer_bytes=best_tx * best_tc * bits,
+                     weight_rereads=-(-n // best_tx),
+                     sram_traffic=best_traffic,
+                     ragged_x=n % best_tx, ragged_c=c_mid % best_tc)

@@ -26,6 +26,7 @@ keeps those scalars as back-compat constructor kwargs / properties.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
@@ -149,7 +150,12 @@ class MemoryHierarchy:
 
     @property
     def names(self) -> Tuple[str, ...]:
-        return tuple(l.name for l in self.levels)
+        try:
+            return object.__getattribute__(self, "_names")
+        except AttributeError:
+            names = tuple(l.name for l in self.levels)
+            object.__setattr__(self, "_names", names)
+            return names
 
     def index(self, name: str) -> int:
         for i, l in enumerate(self.levels):
@@ -203,12 +209,61 @@ class MemoryHierarchy:
         when the operand streams past the array from deeper in the
         hierarchy."""
         st = self.stationary_level(operand, tile_bytes)
-        if st is not self.innermost:
-            return st
+        return self.fill_for_placement(operand, st.name)
+
+    def fill_for_placement(self, operand: str,
+                           level_name: str) -> MemoryLevel:
+        """``fill_level`` in its placement-name form — the single owner
+        of the rule shared by the mapper's candidate ranking and the
+        placement-aware headline costing: a tile stationed in the
+        innermost (array-coupled) buffers refills from the first outer
+        level serving the operand; one stationed deeper streams through
+        its own level's port."""
+        if level_name != self.innermost.name:
+            return self.level(level_name)
         for l in self.levels[1:]:
             if operand in l.serves:
                 return l
         return self.outermost
+
+    # -- signatures ---------------------------------------------------
+
+    @property
+    def cap_signature(self) -> str:
+        """Capacity-structure signature: a content hash of everything
+        operand placement reads — level order, capacities, serve sets,
+        and partitions — with access energies excluded.  Two hierarchies
+        with equal cap signatures place every tile identically; only the
+        pJ/byte used to *rank* candidates may differ, so a memoized
+        mapspace table keyed by this signature is re-costed, never
+        re-enumerated, when a DSE sweep reprices a level (see
+        ``search.memo``).  Computed once per (frozen) instance and
+        returned as a short string (whose hash CPython caches) — memo
+        keys hash it on every lookup."""
+        try:
+            return object.__getattribute__(self, "_cap_sig")
+        except AttributeError:
+            blob = repr(tuple((l.name, l.bytes, l.serves, l.partitions,
+                               l.bus_bytes_per_cycle)
+                              for l in self.levels))
+            sig = hashlib.sha256(blob.encode()).hexdigest()[:16]
+            object.__setattr__(self, "_cap_sig", sig)
+            return sig
+
+    @property
+    def signature(self) -> str:
+        """Full content signature (capacity structure + access
+        energies): hierarchies with equal signatures are interchangeable
+        to every mapper/tiler/partitioner decision."""
+        try:
+            return object.__getattribute__(self, "_sig")
+        except AttributeError:
+            blob = repr(tuple((l.name, l.bytes, l.pj_per_byte,
+                               l.bus_bytes_per_cycle, l.serves,
+                               l.partitions) for l in self.levels))
+            sig = hashlib.sha256(blob.encode()).hexdigest()[:16]
+            object.__setattr__(self, "_sig", sig)
+            return sig
 
     # -- derivation ---------------------------------------------------
 

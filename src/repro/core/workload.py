@@ -13,6 +13,8 @@ models/edgenext.py) and emits the layer list the benchmarks cost out.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
 from typing import Iterator, List, Optional, Tuple
 
 from repro.configs.edgenext_s import EdgeNeXtConfig
@@ -45,6 +47,18 @@ class Layer:
     # graph role annotations used by the fusion planner
     ibn_role: Optional[str] = None   # "expand" | "act" | "project"
     ibn_id: int = -1                 # groups the three IBN layers
+
+    @property
+    def signature(self) -> str:
+        """Canonical content signature: a hash of the layer's op type and
+        loop-dim extents only — independent of its name, chain position,
+        and graph-role annotations (``ibn_role``/``ibn_id``), none of
+        which the search consults.  Two layers with equal signatures are
+        interchangeable to every scheduler decision, which is what the
+        unique-layer memo (``search.memo``) and the schedule cache key
+        (``search.cache.schedule_key``) rely on."""
+        return _layer_signature(self.op, self.b, self.k, self.c, self.ox,
+                                self.oy, self.fx, self.fy, self.bits)
 
     @property
     def macs(self) -> int:
@@ -89,6 +103,13 @@ class Layer:
     @property
     def weight_bytes(self) -> int:
         return self.weight_elems * self.bits // 8
+
+
+@functools.lru_cache(maxsize=None)
+def _layer_signature(op: str, b: int, k: int, c: int, ox: int, oy: int,
+                     fx: int, fy: int, bits: int) -> str:
+    blob = f"{op}:{b}:{k}:{c}:{ox}:{oy}:{fx}:{fy}:{bits}"
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
 
 # ---------------------------------------------------------------------------
@@ -408,6 +429,103 @@ def mobilevit_workload(*, img_size: int = 256,
     layers.append(Layer("head.fc", PWCONV, b=batch,
                         k=num_classes, c=4 * mv2_out[-1]))
     return layers
+
+
+def fastvit_workload(*, img_size: int = 256,
+                     dims: Tuple[int, ...] = (64, 128, 256, 512),
+                     depths: Tuple[int, ...] = (2, 2, 6, 2),
+                     attn_stages: Tuple[int, ...] = (3,),
+                     heads: int = 8, mlp_ratio: int = 3,
+                     num_classes: int = 1000,
+                     batch: int = 1) -> List[Layer]:
+    """A FastViT-style hybrid [arXiv:2303.14189, SA12-like defaults] as
+    a loop-dim layer chain — the third repeat-heavy hybrid-ViT graph
+    next to EdgeNeXt-S and MobileViT-S.
+
+    RepMixer stages: each block is a depthwise 3x3 token mixer followed
+    by a ConvFFN (depthwise 7x7 + pw-expand -> act -> pw-project, the
+    pw pair annotated as an IBN triple).  The last stage swaps the
+    token mixer for softmax self-attention over the stage's native
+    token grid (res/32 of the input, so 8x8 = 64 tokens at the 256
+    default).  Patch embeddings between stages are dw 7x7 stride-2 +
+    pw (the train-time RepMixer/MobileOne overparameterization folds
+    into single convs at inference, which is what this chain models).
+    Stage depths repeat *identical* block shapes — the regime the
+    unique-layer memo fans out over.
+    """
+    layers: List[Layer] = []
+    ibn_id = [4000]
+    res = img_size // 4
+    # folded MobileOne stem: two stride-2 3x3 convs + a pointwise
+    layers.append(Layer("stem.c0", CONV, b=batch, k=dims[0] // 2, c=3,
+                        ox=img_size // 2, oy=img_size // 2, fx=3, fy=3))
+    layers.append(Layer("stem.c1", DWCONV, b=batch, c=dims[0] // 2,
+                        ox=res, oy=res, fx=3, fy=3))
+    layers.append(Layer("stem.c2", PWCONV, b=batch, k=dims[0],
+                        c=dims[0] // 2, ox=res * res))
+
+    def conv_ffn(prefix: str, n: int, c: int, res_xy: int):
+        i = ibn_id[0]
+        ibn_id[0] += 1
+        layers.append(Layer(f"{prefix}.ffn_dw", DWCONV, b=batch, c=c,
+                            ox=res_xy, oy=res_xy, fx=7, fy=7))
+        layers.append(Layer(f"{prefix}.fc1", PWCONV, b=batch,
+                            k=mlp_ratio * c, c=c, ox=n,
+                            ibn_role="expand", ibn_id=i))
+        layers.append(Layer(f"{prefix}.act", ACT, b=batch,
+                            c=mlp_ratio * c, ox=n,
+                            ibn_role="act", ibn_id=i))
+        layers.append(Layer(f"{prefix}.fc2", PWCONV, b=batch, k=c,
+                            c=mlp_ratio * c, ox=n,
+                            ibn_role="project", ibn_id=i))
+        layers.append(Layer(f"{prefix}.res", ELEMWISE, b=batch, c=c,
+                            ox=n))
+
+    for si, (c, d) in enumerate(zip(dims, depths)):
+        if si > 0:
+            # patch embed: dw 7x7 stride 2 + pw channel mix
+            layers.append(Layer(f"s{si}.embed_dw", DWCONV, b=batch,
+                                c=dims[si - 1], ox=res // 2, oy=res // 2,
+                                fx=7, fy=7))
+            res //= 2
+            layers.append(Layer(f"s{si}.embed_pw", PWCONV, b=batch, k=c,
+                                c=dims[si - 1], ox=res * res))
+        n = res * res
+        dh = max(1, c // heads)
+        for bi in range(d):
+            p = f"s{si}.blk{bi}"
+            if si in attn_stages:
+                layers.append(Layer(f"{p}.ln", NORM, b=batch, c=c, ox=n))
+                layers.append(Layer(f"{p}.qkv", PWCONV, b=batch,
+                                    k=3 * c, c=c, ox=n))
+                layers.append(Layer(f"{p}.qk", MATMUL,
+                                    b=batch * heads, k=n, c=dh, ox=n))
+                layers.append(Layer(f"{p}.sm", SOFTMAX,
+                                    b=batch * heads, c=n, ox=n))
+                layers.append(Layer(f"{p}.av", MATMUL,
+                                    b=batch * heads, k=dh, c=n, ox=n))
+                layers.append(Layer(f"{p}.proj", PWCONV, b=batch, k=c,
+                                    c=c, ox=n))
+                layers.append(Layer(f"{p}.res_a", ELEMWISE, b=batch,
+                                    c=c, ox=n))
+            else:
+                # RepMixer token mixer (folded to one dw 3x3 + residual)
+                layers.append(Layer(f"{p}.mix_dw", DWCONV, b=batch, c=c,
+                                    ox=res, oy=res, fx=3, fy=3))
+                layers.append(Layer(f"{p}.res_m", ELEMWISE, b=batch,
+                                    c=c, ox=n))
+            conv_ffn(p, n, c, res)
+    layers.append(Layer("head.ln", NORM, b=batch, c=dims[-1]))
+    layers.append(Layer("head.fc", PWCONV, b=batch, k=num_classes,
+                        c=dims[-1]))
+    return layers
+
+
+def fastvit_serving_workload(batch: int = 4) -> List[Layer]:
+    """FastViT-style graph at a batch>1 serving shape — the third
+    repeat-heavy serving point for the DSE next to the EdgeNeXt-S and
+    MobileViT-S b4 shapes."""
+    return fastvit_workload(batch=batch)
 
 
 def mobilevit_serving_workload(batch: int = 4) -> List[Layer]:

@@ -5,12 +5,19 @@ OXC/CK/CFX mapping trio, the 9-candidate tile list) with design-space
 exploration:
 
   mapper     spatial mappings + temporal loop orders per layer
+             (dominance-pruned fast path, brute-force reference mode)
   partition  DP fusion partitioner over the layer chain
   tiler      budget-driven tile search for depth-first groups
-  dse        Pareto sweep over HWSpec variants
+  dse        Pareto sweep over HWSpec variants (sweep-wide shared memo,
+             optional process-pool fan-out)
   lower      schedule -> concrete Pallas kernel launch parameters
   cache      JSON schedule artifacts + content-addressed cache
-  auto       the orchestrator (``auto_schedule``)
+             (layer-signature keys)
+  memo       unique-layer memo tables (``SearchMemo``)
+  perf       phase timers + memo counters (``PerfRecorder``,
+             the ``search.perf.*`` BENCH surface)
+  auto       the orchestrator (``auto_schedule``; ``dedup=False`` is
+             the bit-exact brute-force equivalence mode)
 
 CLI: ``PYTHONPATH=src python -m repro.search --workload edgenext-s``.
 """
@@ -35,6 +42,8 @@ def get_workload(name: str):
     from repro.core.workload import (edgenext_serving_workload,
                                      edgenext_workload,
                                      efficientvit_workload,
+                                     fastvit_serving_workload,
+                                     fastvit_workload,
                                      mobilevit_serving_workload,
                                      mobilevit_workload, vit_workload)
     builders = {
@@ -45,6 +54,8 @@ def get_workload(name: str):
         "efficientvit-b0": lambda: efficientvit_workload(),
         "mobilevit-s": lambda: mobilevit_workload(),
         "mobilevit-s-b4": lambda: mobilevit_serving_workload(batch=4),
+        "fastvit-s": lambda: fastvit_workload(),
+        "fastvit-s-b4": lambda: fastvit_serving_workload(batch=4),
     }
     if name not in builders:
         raise KeyError(f"unknown workload {name!r}; "
@@ -53,4 +64,5 @@ def get_workload(name: str):
 
 
 WORKLOADS = ("edgenext-s", "edgenext-s-b4", "edgenext-reduced", "vit-tiny",
-             "efficientvit-b0", "mobilevit-s", "mobilevit-s-b4")
+             "efficientvit-b0", "mobilevit-s", "mobilevit-s-b4",
+             "fastvit-s", "fastvit-s-b4")

@@ -7,6 +7,8 @@
         --mem sram:1mb --mem rf:16kb            # resize hierarchy levels
     PYTHONPATH=src python -m repro.search --workload edgenext-s \
         --dse-mem rf sram                        # L1-vs-L2 sizing sweep
+    PYTHONPATH=src python -m repro.search --workload edgenext-s \
+        --profile                                # perf.* fast-path rows
 
 Exit code 0 on success; the schedule artifact is reusable through
 ``repro.search.cache`` (content-addressed by workload + HWSpec, memory
@@ -18,6 +20,7 @@ import argparse
 import dataclasses
 import json
 import sys
+import time
 from pathlib import Path
 
 from repro.core.costmodel import HWSpec
@@ -25,6 +28,7 @@ from repro.core.memory import apply_mem_overrides
 from repro.core.schedule import CONFIG_STACK, evaluate_stack
 from repro.search import (WORKLOADS, auto_schedule, cached_search, dse,
                           get_workload, save_schedule)
+from repro.search.perf import PerfRecorder
 
 
 def _build_hw(args: argparse.Namespace) -> HWSpec:
@@ -73,10 +77,28 @@ def main(argv=None) -> int:
     ap.add_argument("--cols", type=int, default=None)
     ap.add_argument("--sram-kb", type=int, default=None)
     ap.add_argument("--rf-kb", type=int, default=None)
+    ap.add_argument("--profile", action="store_true",
+                    help="print search-performance rows (perf.*): "
+                         "per-phase wall time, memo hit rates, and the "
+                         "wall-time speedup vs the dedup-off "
+                         "brute-force baseline run in the same process")
+    ap.add_argument("--no-dedup", action="store_true",
+                    help="run the brute-force equivalence mode (no "
+                         "unique-layer memo, full enumeration) — "
+                         "bit-identical schedules, slower")
+    ap.add_argument("--jobs", type=int, default=0, metavar="N",
+                    help="process-pool fan-out for --dse/--dse-mem "
+                         "sweeps (0 = serial with a shared sweep-wide "
+                         "memo)")
     args = ap.parse_args(argv)
+    if args.cache_dir and (args.no_dedup or args.profile):
+        ap.error("--cache-dir replays artifacts and bypasses the "
+                 "search, so --no-dedup/--profile would be silently "
+                 "meaningless there; drop one side")
 
     layers = get_workload(args.workload)
     hw = _build_hw(args)
+    dedup = not args.no_dedup
 
     if args.dse_mem:
         sizings = {}
@@ -90,8 +112,30 @@ def main(argv=None) -> int:
                          f"store has no capacity to sweep; choose from "
                          f"{', '.join(l.name for l in hw.hierarchy.on_chip)}")
             sizings[name] = (lvl.bytes // 2, lvl.bytes, lvl.bytes * 2)
+        perf = PerfRecorder()
+        t0 = time.perf_counter()
         pts = dse.sweep_memory(layers, hw, sizings=sizings,
-                               workload=args.workload)
+                               workload=args.workload, dedup=dedup,
+                               perf=perf, parallel=args.jobs)
+        dt = time.perf_counter() - t0
+        if args.profile:
+            # baseline runs under the SAME execution mode (incl.
+            # --jobs) so the ratio isolates the memo/pruning gain,
+            # never the pool parallelism; results must stay identical
+            t1 = time.perf_counter()
+            pts_b = dse.sweep_memory(layers, hw, sizings=sizings,
+                                     workload=args.workload,
+                                     dedup=False, parallel=args.jobs)
+            dt_brute = time.perf_counter() - t1
+            assert [dataclasses.asdict(p.schedule) for p in pts] == \
+                [dataclasses.asdict(p.schedule) for p in pts_b], \
+                "dedup-on/off sweeps diverged — memoization bug"
+            for name, value, note in perf.rows("perf"):
+                print(f"{name},{value:.6g},{note}")
+            print(f"perf.dse_mem.wall_ms,{dt * 1e3:.6g},dedup sweep")
+            print(f"perf.dse_mem.speedup,{dt_brute / dt:.6g},"
+                  f"vs dedup-off baseline ({dt_brute * 1e3:.0f} ms, "
+                  f"same jobs setting)")
         front = dse.pareto_front(pts)
         best = dse.edp_best(pts)
         base_pt = next(p for p in pts
@@ -111,7 +155,8 @@ def main(argv=None) -> int:
 
     if args.dse:
         pts = dse.sweep(layers, dse.hw_variants(hw),
-                        workload=args.workload)
+                        workload=args.workload, dedup=dedup,
+                        parallel=args.jobs)
         front = dse.pareto_front(pts)
         best = dse.edp_best(pts)
         print(f"# DSE {args.workload}: {len(pts)} variants, "
@@ -133,11 +178,28 @@ def main(argv=None) -> int:
             print(f"# wrote {args.out}")
         return 0
 
+    perf = PerfRecorder()
     if args.cache_dir:
         sched = cached_search(layers, hw, workload=args.workload,
                               cache_dir=args.cache_dir)
     else:
-        sched = auto_schedule(layers, hw, workload=args.workload)
+        t0 = time.perf_counter()
+        sched = auto_schedule(layers, hw, workload=args.workload,
+                              dedup=dedup, perf=perf)
+        dt = time.perf_counter() - t0
+        if args.profile:
+            t1 = time.perf_counter()
+            brute = auto_schedule(layers, hw, workload=args.workload,
+                                  dedup=False)
+            dt_brute = time.perf_counter() - t1
+            assert dataclasses.asdict(brute) == dataclasses.asdict(sched), \
+                "dedup-on/off schedules diverged — memoization bug"
+            for name, value, note in perf.rows("perf"):
+                print(f"{name},{value:.6g},{note}")
+            print(f"perf.auto.wall_ms,{dt * 1e3:.6g},dedup on")
+            print(f"perf.auto.speedup,{dt_brute / dt:.6g},"
+                  f"vs dedup-off baseline ({dt_brute * 1e3:.1f} ms), "
+                  f"schedules bit-identical")
 
     print(f"# auto-schedule {args.workload} on {hw.rows}x{hw.cols} PEs, "
           f"hierarchy {'/'.join(hw.hierarchy.names)}")

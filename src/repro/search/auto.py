@@ -27,6 +27,8 @@ from repro.core.workload import MAC_OPS, NORM, SOFTMAX, Layer
 from repro.search import cache as cache_mod
 from repro.search import lower as lower_mod
 from repro.search import mapper, partition, tiler
+from repro.search.memo import SearchMemo
+from repro.search.perf import PerfRecorder
 
 
 @dataclasses.dataclass
@@ -66,7 +68,10 @@ class Schedule:
 
 def evaluate_schedule(layers: List[Layer], schedule: Schedule,
                       hw: Optional[HWSpec] = None, *,
-                      tile_aware: bool = False) -> NetworkCost:
+                      tile_aware: bool = False,
+                      cycles: Optional[Dict[str, int]] = None,
+                      dedup: bool = True,
+                      cost_cache: Optional[Dict] = None) -> NetworkCost:
     """Cost a Schedule with the shared zigzag-lite accounting.
 
     ``tile_aware=True`` swaps the flat per-layer SRAM estimate of each
@@ -75,6 +80,13 @@ def evaluate_schedule(layers: List[Layer], schedule: Schedule,
     the metric under which tile-candidate spaces are compared.  The
     default keeps the seed accounting so searched and hand-coded
     schedules stay directly comparable.
+
+    The schedule's per-operand loop placements feed the per-level
+    traffic rows: each operand's streaming is charged to the level its
+    searched stationarity makes the transfer cross (on the paper's
+    3-level design this reproduces the lumped stream-level row
+    bit-exactly; deeper hierarchies split the rows the way the mapper
+    ranked them).
     """
     hw = hw or HWSpec()
     overrides = group_sram_overrides(layers, schedule.groups,
@@ -85,43 +97,70 @@ def evaluate_schedule(layers: List[Layer], schedule: Schedule,
         fused_nonlinear=set(schedule.fused_nonlinear),
         edges=schedule.spill_edge_list(),
         fixed_wiring=schedule.fixed_wiring,
-        sram_overrides=overrides)
+        sram_overrides=overrides,
+        placements=schedule.placements,
+        cycles=cycles, dedup=dedup, cost_cache=cost_cache)
 
 
 def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                   workload: str = "custom",
                   reconfigurable: bool = True,
-                  tile_mode: str = "full") -> Schedule:
+                  tile_mode: str = "full",
+                  dedup: bool = True,
+                  memo: Optional["SearchMemo"] = None,
+                  perf: Optional[PerfRecorder] = None) -> Schedule:
     """Search mappings, loop orders, fusion groups, and tiles for one
     workload on one HWSpec.  ``reconfigurable=False`` restricts the
     whole network to a single fixed-wiring mapping (the paper's baseline
     array) — the search then optimizes only what that array allows.
     ``tile_mode`` selects the tile-candidate space: "full" (divisors +
     imperfect factors, the default) or "pow2" (the ablation baseline the
-    ragged-aware search is measured against)."""
+    ragged-aware search is measured against).
+
+    ``dedup=True`` (default) routes every per-layer / per-group
+    subproblem through a unique-signature memo (``search.memo``) and the
+    pruned temporal enumeration, solving each *unique* layer shape once
+    and fanning the result back out; ``dedup=False`` is the brute-force
+    equivalence mode — no memo, full enumeration — which must produce a
+    bit-identical Schedule (pinned in ``tests/test_search_perf.py``) and
+    is the baseline the ``search.perf.*`` speedup rows measure against.
+    Pass a shared ``memo`` to reuse tables across the calls of a DSE
+    sweep; pass ``perf`` (a ``search.perf.PerfRecorder``) to collect
+    per-phase wall times and memo hit rates.
+    """
     hw = hw or HWSpec()
+    if not dedup and memo is not None:
+        raise ValueError("dedup=False is the brute-force equivalence "
+                         "mode — a memo would partially accelerate the "
+                         "baseline; pass one or the other")
+    if memo is None and dedup:
+        memo = SearchMemo(perf=perf)
+    if perf is None:
+        perf = memo.perf if memo is not None else PerfRecorder()
 
     # 1. spatial mappings
-    mappings: Dict[str, Tuple[str, str]] = {}
-    cycles_by_name: Dict[str, int] = {}
-    fixed = None if reconfigurable else \
-        mapper.best_fixed_mapping(layers, hw.rows, hw.cols)
-    for l in layers:
-        if l.op not in MAC_OPS:
-            continue
-        if fixed is not None:
-            from repro.core import dataflow
-            mappings[l.name] = fixed
-            cycles_by_name[l.name] = dataflow.cycles_generic(
-                l, fixed, hw.rows, hw.cols, fixed_wiring=True)
-        else:
-            mc = mapper.best_mapping(l, hw.rows, hw.cols)
-            mappings[l.name] = mc.mapping
-            cycles_by_name[l.name] = mc.cycles
+    with perf.phase("spatial"):
+        mappings: Dict[str, Tuple[str, str]] = {}
+        cycles_by_name: Dict[str, int] = {}
+        fixed = None if reconfigurable else \
+            mapper.best_fixed_mapping(layers, hw.rows, hw.cols)
+        for l in layers:
+            if l.op not in MAC_OPS:
+                continue
+            if fixed is not None:
+                from repro.core import dataflow
+                mappings[l.name] = fixed
+                cycles_by_name[l.name] = dataflow.cycles_generic(
+                    l, fixed, hw.rows, hw.cols, fixed_wiring=True)
+            else:
+                mc = mapper.best_mapping(l, hw.rows, hw.cols, memo=memo)
+                mappings[l.name] = mc.mapping
+                cycles_by_name[l.name] = mc.cycles
 
     # 2. fusion partition (DP)
-    part = partition.partition_chain(layers, cycles_by_name, hw,
-                                     tile_mode=tile_mode)
+    with perf.phase("partition"):
+        part = partition.partition_chain(layers, cycles_by_name, hw,
+                                         tile_mode=tile_mode, memo=memo)
 
     # 3. tiles + group summaries
     tiles: Dict[str, Dict[str, int]] = {}
@@ -143,48 +182,59 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
     # 4. temporal orders (pixelwise-constrained where a channel-stat
     #    nonlinear fused into this layer's writeback) + per-operand
     #    stationarity placements over the memory hierarchy
-    orders: Dict[str, Tuple[str, ...]] = {}
-    placements: Dict[str, Dict[str, str]] = {}
-    fused_set = set(part.fused_nonlinear)
-    for g in part.groups:
-        sl = layers[g.start:g.end]
-        last_mac: Optional[Layer] = None
-        needs_pixelwise: Dict[str, bool] = {}
-        for l in sl:
-            if l.op in MAC_OPS:
-                last_mac = l
-                needs_pixelwise.setdefault(l.name, False)
-            elif (l.op in (NORM, SOFTMAX) and l.name in fused_set
-                  and last_mac is not None):
-                needs_pixelwise[last_mac.name] = True
-        for l in sl:
-            if l.op not in MAC_OPS:
-                continue
-            t = mapper.best_temporal(
-                l, hw, require_pixelwise=needs_pixelwise.get(l.name, False),
-                tile_mode=tile_mode)
-            if t is None:
-                t = mapper.best_temporal(l, hw, tile_mode=tile_mode)
-            if t is not None:
-                orders[l.name] = t.order
-                placements[l.name] = dict(t.placement)
+    brute = not dedup
+    with perf.phase("temporal"):
+        orders: Dict[str, Tuple[str, ...]] = {}
+        placements: Dict[str, Dict[str, str]] = {}
+        fused_set = set(part.fused_nonlinear)
+        for g in part.groups:
+            sl = layers[g.start:g.end]
+            last_mac: Optional[Layer] = None
+            needs_pixelwise: Dict[str, bool] = {}
+            for l in sl:
+                if l.op in MAC_OPS:
+                    last_mac = l
+                    needs_pixelwise.setdefault(l.name, False)
+                elif (l.op in (NORM, SOFTMAX) and l.name in fused_set
+                      and last_mac is not None):
+                    needs_pixelwise[last_mac.name] = True
+            for l in sl:
+                if l.op not in MAC_OPS:
+                    continue
+                t = mapper.best_temporal(
+                    l, hw,
+                    require_pixelwise=needs_pixelwise.get(l.name, False),
+                    tile_mode=tile_mode, memo=memo, brute=brute)
+                if t is None:
+                    t = mapper.best_temporal(l, hw, tile_mode=tile_mode,
+                                             memo=memo, brute=brute)
+                if t is not None:
+                    orders[l.name] = t.order
+                    placements[l.name] = dict(t.placement)
 
     # 5. Pallas launch parameters (a group parked at a deeper residence
     #    level lowers against that level's capacity, not the RF's)
-    lowered = {
-        " + ".join(lk.layer_names): {"kernel": lk.kernel, **lk.params,
-                                     "ragged": dict(lk.ragged)}
-        for lk in lower_mod.lower_schedule(
-            list(layers), part.groups, tiles,
-            local_buffer=hw.output_rf_bytes,
-            level_budgets={name: cap for name, cap, _ in
-                           partition.residence_budgets(hw)})}
+    with perf.phase("lower"):
+        lowered = {
+            " + ".join(lk.layer_names): {"kernel": lk.kernel, **lk.params,
+                                         "ragged": dict(lk.ragged)}
+            for lk in lower_mod.lower_schedule(
+                list(layers), part.groups, tiles,
+                local_buffer=hw.output_rf_bytes,
+                level_budgets={name: cap for name, cap, _ in
+                               partition.residence_budgets(hw)})}
 
-    hw_doc = dataclasses.asdict(hw)
-    hw_doc["hierarchy"] = hw.hierarchy.to_json()
+    # same document dataclasses.asdict would build, minus walking the
+    # nested hierarchy twice (it is replaced by its JSON form anyway)
+    hw_doc = {"rows": hw.rows, "cols": hw.cols, "clock_hz": hw.clock_hz,
+              "bits": hw.bits, "e_mac": hw.e_mac,
+              "static_mw": hw.static_mw,
+              "hierarchy": hw.hierarchy.to_json()}
+    with perf.phase("key"):
+        key = cache_mod.schedule_key(layers, hw, tile_mode)
     sched = Schedule(
         version=cache_mod.SEARCH_VERSION, workload=workload,
-        key=cache_mod.schedule_key(layers, hw, tile_mode),
+        key=key,
         hw=hw_doc,
         mappings=mappings, orders=orders,
         fused_nonlinear=tuple(part.fused_nonlinear),
@@ -198,17 +248,27 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
     # 6. headline numbers under the shared accounting, plus the
     #    tile-aware (ragged-edge) variant used to compare candidate
     #    spaces under identical accounting
-    nc = evaluate_schedule(layers, sched, hw)
-    nct = evaluate_schedule(layers, sched, hw, tile_aware=True)
-    # the tile-aware stream traffic lands at the hierarchy's stream
-    # level ("sram" on the paper design, "l1" on a 4-level one) — read
-    # it by level name, not by the legacy key
-    from repro.core.costmodel import _stream_level
-    stream = _stream_level(hw).name
-    sched.cost = {"latency_s": nc.latency_s, "energy_j": nc.energy_j,
-                  "edp": nc.edp, "fps": nc.fps,
-                  "dram_bytes": float(nc.dram_bytes()),
-                  "energy_tiled_j": nct.energy_j, "edp_tiled": nct.edp,
-                  "sram_tiled_bytes": float(sum(
-                      lc.traffic.get(stream, 0) for lc in nct.layers))}
+    with perf.phase("evaluate"):
+        cost_cache: Optional[Dict] = {} if dedup else None
+        nc = evaluate_schedule(layers, sched, hw, cycles=cycles_by_name,
+                               dedup=dedup, cost_cache=cost_cache)
+        nct = evaluate_schedule(layers, sched, hw, tile_aware=True,
+                                cycles=cycles_by_name, dedup=dedup,
+                                cost_cache=cost_cache)
+        # the tile-aware stream traffic lands at the hierarchy's stream
+        # level ("sram" on the paper design, "l1" on a 4-level one) —
+        # read it by level name, not by the legacy key.  Latency/energy
+        # are computed once and combined locally (the properties derive
+        # edp/fps from exactly these two numbers).
+        from repro.core.costmodel import _stream_level
+        stream = _stream_level(hw).name
+        lat, en = nc.latency_s, nc.energy_j
+        lat_t, en_t = nct.latency_s, nct.energy_j
+        sched.cost = {"latency_s": lat, "energy_j": en,
+                      "edp": en * lat, "fps": 1.0 / lat,
+                      "dram_bytes": float(nc.dram_bytes()),
+                      "energy_tiled_j": en_t, "edp_tiled": en_t * lat_t,
+                      "sram_tiled_bytes": float(sum(
+                          lc.traffic.get(stream, 0)
+                          for lc in nct.layers))}
     return sched

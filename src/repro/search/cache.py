@@ -23,21 +23,25 @@ from repro.core.workload import Layer
 #     accounting, tiled cost rows, ragged-aware lowering
 # v3: N-level MemoryHierarchy in HWSpec (hashed via the nested level
 #     list), per-operand loop placements, per-level group residence
-SEARCH_VERSION = 3
-
-
-def _canon_layers(layers: List[Layer]) -> List[dict]:
-    return [dataclasses.asdict(l) for l in layers]
+# v4: placement-aware per-level traffic rows in the headline costing;
+#     cache keys hash the ordered layer-signature list + the HWSpec
+#     content signature (stable across cosmetic layer renames /
+#     annotation changes, which never affect the searched schedule)
+SEARCH_VERSION = 4
 
 
 def schedule_key(layers: List[Layer], hw: HWSpec,
                  tile_mode: str = "full") -> str:
-    """Content hash identifying one search problem.  ``tile_mode`` is a
-    search dimension: a pow2-ablation schedule must never be replayed as
-    a full-enumeration result."""
+    """Content hash identifying one search problem: the ordered list of
+    canonical layer signatures (op/dims only — layer *names* and graph
+    annotations never reach a scheduler decision, so a cosmetic rename
+    keeps the key), the HWSpec content signature, and the tile-candidate
+    mode (a search dimension: a pow2-ablation schedule must never be
+    replayed as a full-enumeration result)."""
     blob = json.dumps(
-        {"v": SEARCH_VERSION, "hw": dataclasses.asdict(hw),
-         "layers": _canon_layers(layers), "tile_mode": tile_mode},
+        {"v": SEARCH_VERSION, "hw": hw.signature,
+         "layers": [l.signature for l in layers],
+         "tile_mode": tile_mode},
         sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
@@ -79,11 +83,52 @@ def load_schedule(path: Path) -> Optional["object"]:
         return None
 
 
+def _remap_layer_names(sched, layers: List[Layer]):
+    """Align a replayed schedule's name-keyed fields to the request's
+    layer names.
+
+    ``schedule_key`` hashes content signatures, not names, so a cache
+    hit after a cosmetic rename is expected — but the artifact's
+    mappings/orders/placements/tiles/lowered dicts still carry the OLD
+    names, which would silently fail to apply.  The key match guarantees
+    the ordered shape list is identical, so the artifact's chain (its
+    group tuples tile the chain in order) maps positionally onto the
+    request's names.  Returns the remapped Schedule, or None when the
+    artifact's name list does not tile the chain (corrupt artifact —
+    caller re-searches)."""
+    import dataclasses as _dc
+    old = [n for g in sched.groups for n in g]
+    new = [l.name for l in layers]
+    if old == new:
+        return sched
+    if len(old) != len(new):
+        return None
+    m = dict(zip(old, new))
+
+    def _join_key(joined: str) -> str:
+        return " + ".join(m.get(p, p) for p in joined.split(" + "))
+
+    try:
+        return _dc.replace(
+            sched,
+            mappings={m[k]: v for k, v in sched.mappings.items()},
+            orders={m[k]: v for k, v in sched.orders.items()},
+            placements={m[k]: v for k, v in sched.placements.items()},
+            fused_nonlinear=tuple(m[n] for n in sched.fused_nonlinear),
+            groups=tuple(tuple(m[n] for n in g) for g in sched.groups),
+            tiles={m[k]: v for k, v in sched.tiles.items()},
+            lowered={_join_key(k): v for k, v in sched.lowered.items()})
+    except KeyError:        # name outside the chain: corrupt artifact
+        return None
+
+
 def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                   workload: str = "custom",
                   cache_dir: Optional[Path] = None,
                   refresh: bool = False):
-    """Run (or replay) the auto-scheduler through the artifact cache."""
+    """Run (or replay) the auto-scheduler through the artifact cache.
+    Replayed artifacts are name-remapped onto the request's layers (the
+    content-hashed key is rename-stable by design)."""
     from repro.search.auto import auto_schedule
     hw = hw or HWSpec()
     if cache_dir is None:
@@ -93,7 +138,9 @@ def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
     if not refresh and path.exists():
         sched = load_schedule(path)
         if sched is not None and sched.key == key:
-            return sched
+            sched = _remap_layer_names(sched, layers)
+            if sched is not None:
+                return sched
     sched = auto_schedule(layers, hw, workload=workload)
     save_schedule(sched, path)
     return sched

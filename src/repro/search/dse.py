@@ -14,6 +14,18 @@ Two sweep axes:
     lines), act partitions keeping their share.  The fixed paper spec
     is one grid point, so the Pareto front directly answers whether a
     different on-chip split beats it.
+
+Sweeps are *incremental*: all variants of one sweep share a
+``SearchMemo``, so per-layer results whose inputs are invariant under
+the varied sizes are solved once — spatial mappings (hierarchy-
+independent) span every memory variant, temporal-mapspace tables span
+every variant keeping the PE-coupled buffers, per-capacity group tiles
+span every variant sharing a residence budget — and only the
+placement/ranking decisions that actually read the changed capacities
+or energies are re-costed per variant.  ``parallel=N`` instead fans the
+variants out over a process pool (each worker dedups within its own
+variant); results are identical either way since the memoization is
+exact.
 """
 from __future__ import annotations
 
@@ -24,6 +36,8 @@ from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 from repro.core.costmodel import HWSpec
 from repro.core.workload import Layer
 from repro.search.auto import Schedule, auto_schedule
+from repro.search.memo import SearchMemo
+from repro.search.perf import PerfRecorder
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,19 +92,64 @@ def hw_variants(base: Optional[HWSpec] = None, *,
     return out
 
 
+def _point(hw: HWSpec, sched: Schedule,
+           mem: Tuple[Tuple[str, int], ...] = ()) -> DsePoint:
+    return DsePoint(
+        rows=hw.rows, cols=hw.cols, sram_kb=hw.sram_bytes // 1024,
+        rf_kb=hw.output_rf_bytes // 1024,
+        latency_s=sched.cost["latency_s"],
+        energy_j=sched.cost["energy_j"], edp=sched.cost["edp"],
+        schedule=sched, mem=mem)
+
+
+def _schedule_variant(args) -> Schedule:
+    """Process-pool worker: one variant, own memo (module-level so it
+    pickles under the spawn start method too)."""
+    layers, hw, workload, dedup = args
+    return auto_schedule(layers, hw, workload=workload, dedup=dedup)
+
+
+def _schedule_variants(layers: List[Layer], variants: Sequence[HWSpec],
+                       workload: str, dedup: bool,
+                       memo: Optional[SearchMemo],
+                       perf: Optional[PerfRecorder],
+                       parallel: int) -> List[Schedule]:
+    """One Schedule per variant — serially through a sweep-wide shared
+    memo (incremental re-costing), or fanned out over a process pool
+    (each worker dedups within its own variant; a caller-supplied memo
+    cannot cross process boundaries, so passing one with ``parallel`` is
+    an error rather than a silent drop, and ``perf`` collects no phase
+    rows from workers)."""
+    if parallel > 1:
+        if memo is not None:
+            raise ValueError("parallel sweeps cannot share a caller-"
+                             "supplied memo across processes; drop "
+                             "memo= or run serially")
+        from concurrent.futures import ProcessPoolExecutor
+        with ProcessPoolExecutor(max_workers=parallel) as ex:
+            return list(ex.map(
+                _schedule_variant,
+                [(layers, hw, workload, dedup) for hw in variants]))
+    if memo is None and dedup:
+        memo = SearchMemo(perf=perf)
+    return [auto_schedule(layers, hw, workload=workload, dedup=dedup,
+                          memo=memo, perf=perf) for hw in variants]
+
+
 def sweep(layers: List[Layer], variants: Optional[Iterable[HWSpec]] = None,
-          *, workload: str = "custom") -> List[DsePoint]:
-    """Run the auto-scheduler on every HW variant."""
-    pts: List[DsePoint] = []
-    for hw in (variants if variants is not None else hw_variants()):
-        sched = auto_schedule(layers, hw, workload=workload)
-        pts.append(DsePoint(
-            rows=hw.rows, cols=hw.cols, sram_kb=hw.sram_bytes // 1024,
-            rf_kb=hw.output_rf_bytes // 1024,
-            latency_s=sched.cost["latency_s"],
-            energy_j=sched.cost["energy_j"], edp=sched.cost["edp"],
-            schedule=sched))
-    return pts
+          *, workload: str = "custom", dedup: bool = True,
+          memo: Optional[SearchMemo] = None,
+          perf: Optional[PerfRecorder] = None,
+          parallel: int = 0) -> List[DsePoint]:
+    """Run the auto-scheduler on every HW variant.  All variants share
+    one ``SearchMemo`` (pass ``memo`` to extend the sharing across
+    sweeps, ``dedup=False`` for the brute-force baseline, ``parallel=N``
+    for a process-pool fan-out, ``perf`` to collect phase times and memo
+    hit rates across the whole sweep)."""
+    hws = list(variants if variants is not None else hw_variants())
+    scheds = _schedule_variants(layers, hws, workload, dedup, memo, perf,
+                                parallel)
+    return [_point(hw, sched) for hw, sched in zip(hws, scheds)]
 
 
 def memory_variants(base: Optional[HWSpec] = None, *,
@@ -128,23 +187,25 @@ def memory_variants(base: Optional[HWSpec] = None, *,
 
 def sweep_memory(layers: List[Layer], base: Optional[HWSpec] = None, *,
                  sizings: Mapping[str, Sequence[int]],
-                 workload: str = "custom") -> List[DsePoint]:
+                 workload: str = "custom", dedup: bool = True,
+                 memo: Optional[SearchMemo] = None,
+                 perf: Optional[PerfRecorder] = None,
+                 parallel: int = 0) -> List[DsePoint]:
     """Run the auto-scheduler over a hierarchy-sizing grid; points are
     labeled by their per-level byte assignment (e.g. ``rf32k-sram256k``).
-    """
+    Incremental: the sweep-wide shared memo re-uses every sub-result
+    whose inputs the resized levels do not touch (see module docstring);
+    ``dedup=False`` is the from-scratch baseline the ``search.perf.*``
+    speedup rows measure against."""
     base = base or HWSpec()
-    pts: List[DsePoint] = []
-    for hw in memory_variants(base, sizings=sizings):
-        sched = auto_schedule(layers, hw, workload=workload)
-        mem = tuple((l.name, l.bytes) for l in hw.hierarchy.levels
-                    if l.name in sizings)
-        pts.append(DsePoint(
-            rows=hw.rows, cols=hw.cols, sram_kb=hw.sram_bytes // 1024,
-            rf_kb=hw.output_rf_bytes // 1024,
-            latency_s=sched.cost["latency_s"],
-            energy_j=sched.cost["energy_j"], edp=sched.cost["edp"],
-            schedule=sched, mem=mem))
-    return pts
+    hws = memory_variants(base, sizings=sizings)
+    scheds = _schedule_variants(layers, hws, workload, dedup, memo, perf,
+                                parallel)
+    return [_point(hw, sched,
+                   mem=tuple((l.name, l.bytes)
+                             for l in hw.hierarchy.levels
+                             if l.name in sizings))
+            for hw, sched in zip(hws, scheds)]
 
 
 def dominates(a: DsePoint, b: DsePoint) -> bool:

@@ -91,12 +91,33 @@ def _unfused_nonlinear_pj(l: Layer, hw: HWSpec) -> float:
             + stall * _static_pj_per_cycle(hw))
 
 
-def _group_cost(layers: Sequence[Layer], j: int, i: int,
-                cycles_by_name: Dict[str, int], hw: HWSpec,
-                budgets: Sequence[tiler.LevelBudget],
-                tile_mode: str = "full") -> Optional[Tuple[float, Group]]:
-    """Cost + metadata of fusing layers[j:i] into one group, or None if
-    the slice is not a feasible group."""
+def _group_meta(layers: Sequence[Layer], j: int, i: int,
+                tile: Optional[tiler.GroupTile]) -> Group:
+    """Materialize the Group record for a chosen span — deferred out of
+    the DP probe loop, which only needs the scalar cost."""
+    fused: List[str] = []
+    unfused: List[str] = []
+    seen_mac = False
+    for l in layers[j:i]:
+        if l.op in MAC_OPS:
+            seen_mac = True
+        elif seen_mac:
+            fused.append(l.name)       # pixelwise writeback fusion (C2)
+        else:
+            unfused.append(l.name)     # no producer in this group
+    return Group(start=j, end=i, tile=tile, fused_nonlinear=tuple(fused),
+                 unfused_nonlinear=tuple(unfused))
+
+
+def _group_cost_brute(layers: Sequence[Layer], j: int, i: int,
+                      cycles_by_name: Dict[str, int], hw: HWSpec,
+                      budgets: Sequence[tiler.LevelBudget],
+                      tile_mode: str) -> Optional[Tuple[float, Group]]:
+    """Reference per-span cost: the direct derivation every DP probe ran
+    before the fast path (kept verbatim as the ``memo=None`` mode) — an
+    independent implementation the hoisted/memoized probe loop is
+    equality-tested against (``tests/test_search_perf.py``), and the
+    dedup-off baseline the ``search.perf.*`` speedup rows measure."""
     sl = layers[j:i]
     macs = [l for l in sl if l.op in MAC_OPS]
     fused: List[str] = []
@@ -119,10 +140,6 @@ def _group_cost(layers: Sequence[Layer], j: int, i: int,
                                 mode=tile_mode)
         if tile is None:
             return None
-        # depth-first group: spill-level traffic comes from the tiler
-        # (input re-reads per channel round + weight re-streams per x
-        # slab); interior tensors move only through the residence level
-        # the tiler chose (write + read per byte at that level's pJ)
         interior = tiler.interior_bytes(sl)
         level_pj = next(p for n, _, p in budgets if n == tile.level)
         pj += tile.sram_traffic * stream_pj + 2 * interior * level_pj
@@ -135,6 +152,54 @@ def _group_cost(layers: Sequence[Layer], j: int, i: int,
 
     return pj, Group(start=j, end=i, tile=tile, fused_nonlinear=tuple(fused),
                      unfused_nonlinear=tuple(unfused))
+
+
+def _partition_brute(layers: Sequence[Layer],
+                     cycles_by_name: Dict[str, int], hw: HWSpec,
+                     act_budget: int,
+                     budgets: Sequence[tiler.LevelBudget],
+                     max_span: int, tile_mode: str) -> Partition:
+    """The pre-fastpath DP loop (direct per-span derivation, no memo,
+    no hoisting): bit-identical groups/edges/cost to the fast loop."""
+    spill_pj = hw.hierarchy.outermost.pj_per_byte
+    n = len(layers)
+    INF = float("inf")
+    dp: List[float] = [INF] * (n + 1)
+    dp[0] = 0.0
+    choice: List[Optional[Tuple[int, float, Group]]] = [None] * (n + 1)
+
+    for i in range(1, n + 1):
+        for j in range(max(0, i - max_span), i):
+            if dp[j] == INF:
+                continue
+            gc = _group_cost_brute(layers, j, i, cycles_by_name, hw,
+                                   budgets, tile_mode)
+            if gc is None:
+                continue
+            pj, grp = gc
+            if j > 0:
+                nbytes = layers[j - 1].output_bytes
+                if nbytes > act_budget:
+                    pj += 2 * nbytes * spill_pj
+            if dp[j] + pj < dp[i]:
+                dp[i] = dp[j] + pj
+                choice[i] = (j, pj, grp)
+
+    assert dp[n] < INF, "no feasible partition (single layers are always" \
+                        " feasible — this indicates a bug)"
+    groups: List[Group] = []
+    i = n
+    while i > 0:
+        j, _, grp = choice[i]        # type: ignore[misc]
+        groups.append(grp)
+        i = j
+    groups.reverse()
+    edges: List[SpillEdge] = []
+    for gi in range(len(groups) - 1):
+        e = _boundary_edge(layers, groups, gi, act_budget)
+        if e is not None:
+            edges.append(e)
+    return Partition(groups=groups, edges=edges, cost_pj=dp[n])
 
 
 def _boundary_edge(layers: Sequence[Layer], groups: List[Group],
@@ -176,7 +241,8 @@ def partition_chain(layers: Sequence[Layer],
                     act_budget: Optional[int] = None,
                     local_buffer: Optional[int] = None,
                     max_span: int = 10,
-                    tile_mode: str = "full") -> Partition:
+                    tile_mode: str = "full",
+                    memo=None) -> Partition:
     """Optimal contiguous segmentation of the chain into fusion groups.
 
     ``cycles_by_name`` carries each MAC layer's compute cycles under its
@@ -186,6 +252,13 @@ def partition_chain(layers: Sequence[Layer],
     ``act_budget`` defaults to the hierarchy's spill-level act
     partition; ``local_buffer`` (single-level override, kept for tests /
     ablations) replaces the hierarchy-derived residence budget vector.
+    ``memo`` (a ``search.memo.SearchMemo``) selects the fast probe loop:
+    span-invariant per-layer terms hoisted out of the O(n * max_span)
+    probes, chain-feasibility prechecks, and group-tile searches dedup'd
+    by block signature.  Without a memo the original direct per-span
+    derivation runs (``_partition_brute``) — the two are bit-identical
+    (pinned by the dedup on/off property tests) and the direct form is
+    the dedup-off baseline the ``search.perf.*`` rows measure against.
     """
     hw = hw or HWSpec()
     if act_budget is None:
@@ -195,39 +268,158 @@ def partition_chain(layers: Sequence[Layer],
     else:
         budgets = ((hw.hierarchy.innermost.name, local_buffer,
                     hw.e_rf_byte),)
+    if memo is None:
+        return _partition_brute(layers, cycles_by_name, hw, act_budget,
+                                budgets, max_span, tile_mode)
     spill_pj = hw.hierarchy.outermost.pj_per_byte
     n = len(layers)
+    # -- span-invariant terms, hoisted out of the O(n * max_span) DP
+    # probe loop (bit-identical: the probes sum the same floats in the
+    # same order as the direct per-span derivation did) --
+    stream_pj = _stream_pj(hw)
+    is_mac = [l.op in MAC_OPS for l in layers]
+    # per-layer energy terms: (with, without) operand streaming for MAC
+    # layers, the unfused bus-streaming cost for nonlinears
+    mac_pj: List[Tuple[float, float]] = [(0.0, 0.0)] * n
+    nl_pj: List[float] = [0.0] * n
+    for idx, l in enumerate(layers):
+        if is_mac[idx]:
+            cyc = cycles_by_name[l.name]
+            mac_pj[idx] = (_mac_base_pj(l, cyc, hw),
+                           _mac_base_pj(l, cyc, hw, include_sram=False))
+        else:
+            nl_pj[idx] = _unfused_nonlinear_pj(l, hw)
+    # prefix MAC counts + first-MAC-at-or-after, for O(1) span structure
+    nmac = [0] * (n + 1)
+    for idx in range(n):
+        nmac[idx + 1] = nmac[idx] + (1 if is_mac[idx] else 0)
+    first_mac = [n] * (n + 1)
+    for idx in range(n - 1, -1, -1):
+        first_mac[idx] = idx if is_mac[idx] else first_mac[idx + 1]
+    last_mac = [-1] * (n + 1)
+    for idx in range(n):
+        last_mac[idx + 1] = idx if is_mac[idx] else last_mac[idx]
+    # depth-first chain feasibility: chain_end[idx] = last layer index of
+    # the maximal pairwise-compatible MAC chain starting at MAC idx — a
+    # multi-MAC span is fusible iff its last MAC is within its first
+    # MAC's chain, which prunes the hopeless tile searches the DP would
+    # otherwise probe O(n * max_span) times
+    mac_positions = [idx for idx in range(n) if is_mac[idx]]
+    chain_end: Dict[int, int] = {}
+    for p in range(len(mac_positions) - 1, -1, -1):
+        idx = mac_positions[p]
+        if p + 1 < len(mac_positions) and tiler.chain_compatible(
+                layers[idx], layers[mac_positions[p + 1]]):
+            chain_end[idx] = chain_end[mac_positions[p + 1]]
+        else:
+            chain_end[idx] = idx
+    sigs = tuple(l.signature for l in layers)
+    # boundary-tensor bytes, probed once per (i, j) pair otherwise
+    out_bytes = [l.output_bytes for l in layers]
+    # unfused-nonlinear run cost ahead of each position's first MAC:
+    # nl_run[j] = nl_pj[j] + nl_pj[j+1] + ... up to (excl.) first_mac[j],
+    # accumulated per j in the same left-to-right order the probe loop
+    # summed, so the hoisted value is the bit-exact same float
+    nl_run = [0.0] * (n + 1)
+    for j in range(n):
+        s = 0.0
+        for idx in range(j, first_mac[j]):
+            s += nl_pj[idx]
+        nl_run[j] = s
+    gtab = memo.raw("group_tile")
+    g_hits = g_miss = 0
+    _MISS = object()
+    tile_group_at = tiler._tile_group_at
+    interior_of = tiler.interior_bytes
+    replace = dataclasses.replace
+
     INF = float("inf")
     dp: List[float] = [INF] * (n + 1)
     dp[0] = 0.0
-    choice: List[Optional[Tuple[int, float, Group]]] = [None] * (n + 1)
+    # chosen (j, tile) per DP node; Group metadata is materialized only
+    # for the winning chain after the backtrace
+    choice: List[Optional[Tuple[int, Optional[tiler.GroupTile]]]] = \
+        [None] * (n + 1)
 
     for i in range(1, n + 1):
         for j in range(max(0, i - max_span), i):
             if dp[j] == INF:
                 continue
-            gc = _group_cost(layers, j, i, cycles_by_name, hw, budgets,
-                             tile_mode=tile_mode)
-            if gc is None:
-                continue
-            pj, grp = gc
+            m = nmac[i] - nmac[j]
+            fm = first_mac[j]
+            tile: Optional[tiler.GroupTile] = None
+            # unfused nonlinears: the non-MAC layers before the span's
+            # first MAC (everything after one fuses into its writeback)
+            if fm < i:
+                pj = nl_run[j]
+            else:                      # MAC-less span: the run is cut at i
+                pj = 0.0
+                for idx in range(j, i):
+                    pj += nl_pj[idx]
+            if m > 1:
+                if chain_end[fm] < last_mac[i]:
+                    continue           # chain breaks inside the span
+                sl = layers[j:i]
+                # per-budget tile search through the group_tile memo
+                # (same per-capacity result + cross-level energy choice
+                # as ``tiler.tile_group``, with the table raw-accessed
+                # in the probe loop); the per-level tile never reads
+                # access energies, so entries are shared across every
+                # DSE variant with the same residence capacity
+                tile_pj = 0.0
+                gsig = sigs[j:i]
+                interior = interior_of(sl)
+                for nm, capacity, level_pj in budgets:
+                    k = (gsig, capacity, tile_mode)
+                    t = gtab.get(k, _MISS)
+                    if t is _MISS:
+                        t = gtab[k] = tile_group_at(sl, capacity,
+                                                    tile_mode)
+                        g_miss += 1
+                    else:
+                        g_hits += 1
+                    if t is None:
+                        continue
+                    t_pj = t.sram_traffic * stream_pj \
+                        + 2 * interior * level_pj
+                    if tile is None or t_pj < tile_pj:
+                        tile = t if t.level == nm else \
+                            replace(t, level=nm)
+                        tile_pj = t_pj
+                if tile is None:
+                    continue           # no tile fits any budget
+                # depth-first group: spill-level traffic comes from the
+                # tiler (input re-reads per channel round + weight
+                # re-streams per x slab); interior tensors move only
+                # through the residence level the tiler chose (write +
+                # read per byte at that level's pJ)
+                pj += tile_pj
+                for idx in range(fm, i):
+                    if is_mac[idx]:
+                        pj += mac_pj[idx][1]
+            elif m == 1:
+                pj += mac_pj[fm][0]
             # boundary spill charged when this group is *opened*, i.e.
             # the tensor entering it came from the previous boundary
             if j > 0:
-                nbytes = layers[j - 1].output_bytes
+                nbytes = out_bytes[j - 1]
                 if nbytes > act_budget:
                     pj += 2 * nbytes * spill_pj
             if dp[j] + pj < dp[i]:
                 dp[i] = dp[j] + pj
-                choice[i] = (j, pj, grp)
+                choice[i] = (j, tile)
+    if g_hits:
+        memo.perf.count("memo.group_tile.hit", g_hits)
+    if g_miss:
+        memo.perf.count("memo.group_tile.miss", g_miss)
 
     assert dp[n] < INF, "no feasible partition (single layers are always" \
                         " feasible — this indicates a bug)"
     groups: List[Group] = []
     i = n
     while i > 0:
-        j, _, grp = choice[i]        # type: ignore[misc]
-        groups.append(grp)
+        j, tile = choice[i]          # type: ignore[misc]
+        groups.append(_group_meta(layers, j, i, tile))
         i = j
     groups.reverse()
 

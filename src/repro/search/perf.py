@@ -1,0 +1,82 @@
+"""Instrumentation for the search fast path — the ``search.perf.*``
+surface.
+
+A ``PerfRecorder`` accumulates per-phase wall time (spatial mapping,
+fusion DP, temporal orders, lowering, evaluation) and memo hit/miss
+counters across one ``auto_schedule`` call or one whole DSE sweep
+(recorders are additive: pass the same instance to every variant).  The
+benchmarks (``benchmarks/dse.py``) and the ``--profile`` CLI flag turn
+one recorder into ``search.perf.*`` rows, so scheduler speed is tracked
+in the BENCH trajectory exactly like the schedules it produces.
+
+Nothing here is load-bearing for search results: with no recorder the
+fast path runs uninstrumented (``phase`` degrades to a no-op), and the
+counters never feed back into any decision.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Dict, Iterator, List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+class PerfRecorder:
+    """Per-phase wall time + memo hit/miss counters for one search run
+    (or one DSE sweep — times and counts accumulate across calls)."""
+
+    def __init__(self) -> None:
+        self.phase_s: Dict[str, float] = {}
+        self.counters: Dict[str, int] = {}
+
+    @contextlib.contextmanager
+    def phase(self, name: str) -> Iterator[None]:
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.phase_s[name] = self.phase_s.get(name, 0.0) \
+                + time.perf_counter() - t0
+
+    def count(self, key: str, n: int = 1) -> None:
+        self.counters[key] = self.counters.get(key, 0) + n
+
+    # -- derived ------------------------------------------------------
+
+    @property
+    def total_s(self) -> float:
+        return sum(self.phase_s.values())
+
+    def hit_rate(self, table: str = "") -> float:
+        """Memo hit fraction over every ``memo.<table>.hit/miss``
+        counter pair (restricted to one table when given); 0.0 with no
+        lookups recorded."""
+        prefix = f"memo.{table}" if table else "memo."
+        hits = sum(v for k, v in self.counters.items()
+                   if k.startswith(prefix) and k.endswith(".hit"))
+        miss = sum(v for k, v in self.counters.items()
+                   if k.startswith(prefix) and k.endswith(".miss"))
+        return hits / (hits + miss) if hits + miss else 0.0
+
+    def rows(self, prefix: str = "search.perf") -> List[Row]:
+        """The instrumentation as benchmark rows: per-phase wall-time,
+        total, and per-table + overall memo hit rates."""
+        out: List[Row] = []
+        for name in sorted(self.phase_s):
+            out.append((f"{prefix}.phase.{name}_ms",
+                        self.phase_s[name] * 1e3, "wall time"))
+        if self.phase_s:
+            out.append((f"{prefix}.total_ms", self.total_s * 1e3,
+                        "sum of instrumented phases"))
+        tables = sorted({k.split(".")[1] for k in self.counters
+                         if k.startswith("memo.")})
+        for t in tables:
+            hits = self.counters.get(f"memo.{t}.hit", 0)
+            miss = self.counters.get(f"memo.{t}.miss", 0)
+            out.append((f"{prefix}.memo.{t}.hit_rate", self.hit_rate(t),
+                        f"{hits} hits / {miss} misses"))
+        if tables:
+            out.append((f"{prefix}.memo.hit_rate", self.hit_rate(),
+                        "all memo tables"))
+        return out

@@ -42,7 +42,7 @@ from typing import List, Optional, Sequence, Tuple
 
 from repro.core import fusion
 from repro.core.fusion import FusedTile
-from repro.core.tiling import Tiling, budget_tile_candidates
+from repro.core.tiling import budget_tile_candidates
 from repro.core.workload import MAC_OPS, NORM, SOFTMAX, Layer
 
 # one budget entry: (level name, capacity bytes, pJ/byte)
@@ -154,25 +154,26 @@ def _tile_group_at(group: Sequence[Layer], capacity: int,
     peak_width = max(a + b for a, b in zip(widths, widths[1:])) \
         if len(widths) > 1 else widths[0]
     w_bytes = sum(l.weight_bytes for l in macs)
-    best: Optional[GroupTile] = None
+    io_bytes = macs[0].input_bytes + macs[-1].output_bytes
+    best_tx = best_traffic = -1
     for tx in _candidates_x(n, peak_width, bytes_per, capacity,
                             mode=mode):
         buf = tx * peak_width * bytes_per
         if buf > capacity:
             continue
-        tiling_x = Tiling(n, tx)
-        # weights re-stream in full each x round (ragged round included);
+        # weights re-stream in full each x round (ragged round included
+        # — the `Tiling` ragged model as plain ceil-div arithmetic);
         # input / output move their exact volume once.
-        traffic = tiling_x.traffic(per_elem=0, per_round=w_bytes) \
-            + macs[0].input_bytes + macs[-1].output_bytes
-        cand = GroupTile(tile_x=tx, tile_c=max(widths),
-                         buffer_bytes=buf,
-                         weight_rereads=tiling_x.rounds,
-                         sram_traffic=traffic,
-                         ragged_x=tiling_x.ragged)
-        if best is None or cand.sram_traffic < best.sram_traffic:
-            best = cand
-    return best
+        traffic = -(-n // tx) * w_bytes + io_bytes
+        if best_traffic < 0 or traffic < best_traffic:
+            best_tx, best_traffic = tx, traffic
+    if best_traffic < 0:
+        return None
+    return GroupTile(tile_x=best_tx, tile_c=max(widths),
+                     buffer_bytes=best_tx * peak_width * bytes_per,
+                     weight_rereads=-(-n // best_tx),
+                     sram_traffic=best_traffic,
+                     ragged_x=n % best_tx)
 
 
 def tile_group(group: Sequence[Layer], *,
@@ -194,6 +195,15 @@ def tile_group(group: Sequence[Layer], *,
     ``stream_pj`` plus the interior write+read at the residence level's
     pJ/byte.  ``local_buffer`` is the single-level shorthand
     (equivalent to ``budgets=[("rf", local_buffer, 0.0)]``).
+
+    This is the pure (memo-free) form; the partitioner's DP, which
+    re-probes the same block signatures O(n * max_span) times, inlines
+    the same per-budget search against the ``group_tile`` memo table
+    (``partition_chain``) — the per-level tile depends only on (shapes,
+    capacity, mode), never on access energies, so one entry serves every
+    DP probe of a repeated block and every DSE variant sharing the
+    residence capacity, while the cross-level energy choice is re-costed
+    live (the incremental-DSE split).
     """
     if budgets is None:
         if local_buffer is None:
@@ -219,6 +229,7 @@ def tile_group(group: Sequence[Layer], *,
             continue
         pj = t.sram_traffic * stream_pj + 2 * interior * level_pj
         if best is None or pj < best_pj:
-            best = dataclasses.replace(t, level=name)
+            best = t if t.level == name else \
+                dataclasses.replace(t, level=name)
             best_pj = pj
     return best

@@ -365,25 +365,26 @@ def test_schedule_json_roundtrip(tmp_path):
     assert back.hw["hierarchy"]["levels"][0]["name"] == "rf"
 
 
-def test_stale_v2_artifacts_rejected(tmp_path):
-    """A SEARCH_VERSION=2 cache entry must never be replayed as a v3
-    result: load_schedule refuses it and cached_search re-searches."""
+def test_stale_v3_artifacts_rejected(tmp_path):
+    """A SEARCH_VERSION=3 cache entry must never be replayed as a v4
+    result: load_schedule refuses it and cached_search re-searches.
+    (v4: placement-aware traffic rows + signature-based cache keys.)"""
     from repro.search.cache import SEARCH_VERSION, schedule_key
-    assert SEARCH_VERSION == 3
+    assert SEARCH_VERSION == 4
     wl = edgenext_workload(reduced_edgenext())
     key = schedule_key(wl, HW)
     path = tmp_path / f"edgenext-reduced-{key}.json"
     save_schedule(SCHED, path)
     doc = json.loads(path.read_text())
-    doc["version"] = 2                   # a stale v2 artifact at the
-    path.write_text(json.dumps(doc))     # exact v3 cache path
+    doc["version"] = 3                   # a stale v3 artifact at the
+    path.write_text(json.dumps(doc))     # exact v4 cache path
     assert load_schedule(path) is None
     sched = cached_search(wl, HW, workload="edgenext-reduced",
                           cache_dir=tmp_path)
-    assert sched.version == 3
+    assert sched.version == 4
     assert sched.workload == "edgenext-reduced"
     # the refreshed artifact replaced the stale one
-    assert json.loads(path.read_text())["version"] == 3
+    assert json.loads(path.read_text())["version"] == 4
 
 
 def test_schedule_places_every_mac_layer():
