@@ -23,8 +23,8 @@ from repro.core.workload import (edgenext_serving_workload,
                                  edgenext_workload, efficientvit_workload,
                                  fastvit_workload, mobilevit_workload,
                                  vit_workload)
-from repro.search import (auto_schedule, dse, edp_best, hw_variants,
-                          pareto_front, sweep, sweep_memory)
+from repro.search import (WORKLOADS, auto_schedule, dse, edp_best,
+                          hw_variants, pareto_front, sweep, sweep_memory)
 from repro.search.perf import PerfRecorder
 
 Row = Tuple[str, float, str]
@@ -145,6 +145,49 @@ def bench_search() -> List[Row]:
             for p in front))
         rows.append((f"search.dse.{name}.front_valid", valid,
                      "1 = non-dominated"))
+    return rows
+
+
+def bench_spatial() -> List[Row]:
+    """The factored-spatial-mapping section: ``search.spatial.*``.
+
+    For every registered workload, the factored mapspace (per-axis
+    (dim, factor) unrollings with row/col replication) is compared
+    against the pair-only ablation under identical accounting:
+    ``edp_factored_vs_pair`` must be <= 1 everywhere (the factored
+    space is a strict superset and ties keep the pair) and strictly
+    < 1 on the depthwise- and small-dim-heavy hybrid graphs; mean
+    spatial utilization must not regress on any workload.
+    """
+    from repro.search import get_workload
+    rows: List[Row] = []
+    hw = HWSpec()
+    util_gains = []
+    for name in WORKLOADS:
+        wl = get_workload(name)
+        key = name.replace("-", "_")
+        fac = auto_schedule(wl, hw, workload=name)
+        pair = auto_schedule(wl, hw, workload=name, spatial_mode="pair")
+        rows.append((f"search.spatial.{key}.edp_factored_vs_pair",
+                     fac.cost["edp"] / pair.cost["edp"],
+                     "<=1: factored mapspace never loses to pairs"))
+        rows.append((f"search.spatial.{key}.mean_util",
+                     fac.cost["spatial_util"],
+                     f"pair-only: {pair.cost['spatial_util']:.4f}"))
+        util_gains.append(fac.cost["spatial_util"]
+                          - pair.cost["spatial_util"])
+        if key == "edgenext_s":
+            from repro.core.dataflow import is_factored
+            n_fac = sum(1 for m in fac.mappings.values()
+                        if is_factored(m))
+            rows.append(("search.spatial.edgenext_s.factored_layers",
+                         n_fac,
+                         f"of {len(fac.mappings)} MAC layers left the "
+                         f"pair space"))
+    rows.append(("search.spatial.mean_util_gain",
+                 sum(util_gains) / len(util_gains),
+                 ">0: mean spatial utilization gain over all "
+                 "registered workloads"))
     return rows
 
 

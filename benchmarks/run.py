@@ -37,11 +37,13 @@ def collect_rows() -> list:
     """All benchmark rows as (name, value, note) tuples."""
     from benchmarks.paper_figs import ALL
     from benchmarks.bench_kernels import bench_kernels
-    from benchmarks.dse import bench_search, bench_search_perf
+    from benchmarks.dse import (bench_search, bench_search_perf,
+                                bench_spatial)
 
     rows = []
     sections = dict(ALL)
     sections["search(DSE)"] = bench_search
+    sections["search(spatial)"] = bench_spatial
     sections["search(perf)"] = bench_search_perf
     for section, fn in sections.items():
         t0 = time.perf_counter()

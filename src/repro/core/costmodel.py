@@ -345,6 +345,12 @@ def _mac_layer_cost(layer: Layer, hw: HWSpec, mapping,
     if isinstance(mapping, str):
         if cyc is None:
             cyc = dataflow.cycles(layer, mapping, hw.rows, hw.cols)
+    elif dataflow.is_factored(mapping):
+        if cyc is None:
+            cyc = dataflow.cycles_factored(layer, mapping, hw.rows,
+                                           hw.cols,
+                                           fixed_wiring=fixed_wiring)
+        mapping = dataflow.mapping_label(mapping)  # display form
     else:
         if cyc is None:
             cyc = dataflow.cycles_generic(layer, mapping, hw.rows,

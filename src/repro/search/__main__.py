@@ -77,6 +77,11 @@ def main(argv=None) -> int:
     ap.add_argument("--cols", type=int, default=None)
     ap.add_argument("--sram-kb", type=int, default=None)
     ap.add_argument("--rf-kb", type=int, default=None)
+    ap.add_argument("--spatial-mode", choices=("factored", "pair"),
+                    default="factored",
+                    help="spatial mapspace: factored per-axis unrollings "
+                         "with row/col replication (default) or the "
+                         "ordered-dim-pair ablation")
     ap.add_argument("--profile", action="store_true",
                     help="print search-performance rows (perf.*): "
                          "per-phase wall time, memo hit rates, and the "
@@ -116,7 +121,8 @@ def main(argv=None) -> int:
         t0 = time.perf_counter()
         pts = dse.sweep_memory(layers, hw, sizings=sizings,
                                workload=args.workload, dedup=dedup,
-                               perf=perf, parallel=args.jobs)
+                               perf=perf, parallel=args.jobs,
+                               spatial_mode=args.spatial_mode)
         dt = time.perf_counter() - t0
         if args.profile:
             # baseline runs under the SAME execution mode (incl.
@@ -125,7 +131,8 @@ def main(argv=None) -> int:
             t1 = time.perf_counter()
             pts_b = dse.sweep_memory(layers, hw, sizings=sizings,
                                      workload=args.workload,
-                                     dedup=False, parallel=args.jobs)
+                                     dedup=False, parallel=args.jobs,
+                                     spatial_mode=args.spatial_mode)
             dt_brute = time.perf_counter() - t1
             assert [dataclasses.asdict(p.schedule) for p in pts] == \
                 [dataclasses.asdict(p.schedule) for p in pts_b], \
@@ -156,7 +163,8 @@ def main(argv=None) -> int:
     if args.dse:
         pts = dse.sweep(layers, dse.hw_variants(hw),
                         workload=args.workload, dedup=dedup,
-                        parallel=args.jobs)
+                        parallel=args.jobs,
+                        spatial_mode=args.spatial_mode)
         front = dse.pareto_front(pts)
         best = dse.edp_best(pts)
         print(f"# DSE {args.workload}: {len(pts)} variants, "
@@ -181,16 +189,19 @@ def main(argv=None) -> int:
     perf = PerfRecorder()
     if args.cache_dir:
         sched = cached_search(layers, hw, workload=args.workload,
-                              cache_dir=args.cache_dir)
+                              cache_dir=args.cache_dir,
+                              spatial_mode=args.spatial_mode)
     else:
         t0 = time.perf_counter()
         sched = auto_schedule(layers, hw, workload=args.workload,
-                              dedup=dedup, perf=perf)
+                              dedup=dedup, perf=perf,
+                              spatial_mode=args.spatial_mode)
         dt = time.perf_counter() - t0
         if args.profile:
             t1 = time.perf_counter()
             brute = auto_schedule(layers, hw, workload=args.workload,
-                                  dedup=False)
+                                  dedup=False,
+                                  spatial_mode=args.spatial_mode)
             dt_brute = time.perf_counter() - t1
             assert dataclasses.asdict(brute) == dataclasses.asdict(sched), \
                 "dedup-on/off schedules diverged — memoization bug"

@@ -36,12 +36,16 @@ class Schedule:
     """A complete searched schedule (JSON-serializable).  ``hw`` embeds
     the full memory hierarchy (nested ``levels`` list), and
     ``placements`` records, per MAC layer, the memory level each
-    operand's stationary tile was placed at by the mapper."""
+    operand's stationary tile was placed at by the mapper.
+
+    A mapping value is a (row_dim, col_dim) pair, or — when the
+    factored search strictly beat every pair on that layer — the
+    factored per-axis form ``((dim, factor), ...)`` per axis."""
     version: int
     workload: str
     key: str                                       # content hash
     hw: Dict[str, object]
-    mappings: Dict[str, Tuple[str, str]]           # MAC layer -> (row, col)
+    mappings: Dict[str, Tuple]                     # MAC layer -> mapping
     orders: Dict[str, Tuple[str, ...]]             # MAC layer -> loop order
     fused_nonlinear: Tuple[str, ...]
     groups: Tuple[Tuple[str, ...], ...]            # layer names per group
@@ -56,6 +60,9 @@ class Schedule:
     # "legacy" | "pow2") — part of the content hash so ablation
     # schedules are never replayed as full-enumeration results
     tile_mode: str = "full"
+    # the spatial mapspace ("factored" | "pair") — same hashing rule:
+    # a pair-only ablation schedule is a different search problem
+    spatial_mode: str = "factored"
     # MAC layer -> {operand: memory-level name} loop placements
     placements: Dict[str, Dict[str, str]] = dataclasses.field(
         default_factory=dict)
@@ -88,12 +95,14 @@ def evaluate_schedule(layers: List[Layer], schedule: Schedule,
     bit-exactly; deeper hierarchies split the rows the way the mapper
     ranked them).
     """
+    from repro.core import dataflow
     hw = hw or HWSpec()
     overrides = group_sram_overrides(layers, schedule.groups,
                                      schedule.tiles) if tile_aware else None
     return cost_network_scheduled(
         layers, hw,
-        mappings={k: tuple(v) for k, v in schedule.mappings.items()},
+        mappings={k: dataflow.as_mapping(v)
+                  for k, v in schedule.mappings.items()},
         fused_nonlinear=set(schedule.fused_nonlinear),
         edges=schedule.spill_edge_list(),
         fixed_wiring=schedule.fixed_wiring,
@@ -106,6 +115,7 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                   workload: str = "custom",
                   reconfigurable: bool = True,
                   tile_mode: str = "full",
+                  spatial_mode: str = "factored",
                   dedup: bool = True,
                   memo: Optional["SearchMemo"] = None,
                   perf: Optional[PerfRecorder] = None) -> Schedule:
@@ -115,7 +125,10 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
     array) — the search then optimizes only what that array allows.
     ``tile_mode`` selects the tile-candidate space: "full" (divisors +
     imperfect factors, the default) or "pow2" (the ablation baseline the
-    ragged-aware search is measured against).
+    ragged-aware search is measured against).  ``spatial_mode`` selects
+    the spatial mapspace: "factored" (per-axis factored unrollings with
+    row/col replication, the default) or "pair" (the ordered-dim-pair
+    ablation — bit-identical to the pre-factored search).
 
     ``dedup=True`` (default) routes every per-layer / per-group
     subproblem through a unique-signature memo (``search.memo``) and the
@@ -135,13 +148,19 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                          "baseline; pass one or the other")
     if memo is None and dedup:
         memo = SearchMemo(perf=perf)
+    elif memo is not None and perf is not None:
+        # caller supplied both: route the shared memo's hit/miss
+        # counters to this call's recorder instead of the memo's
+        # private default (which nobody reads)
+        memo.perf = perf
     if perf is None:
         perf = memo.perf if memo is not None else PerfRecorder()
 
     # 1. spatial mappings
     with perf.phase("spatial"):
-        mappings: Dict[str, Tuple[str, str]] = {}
+        mappings: Dict[str, Tuple] = {}
         cycles_by_name: Dict[str, int] = {}
+        util_sum, util_n = 0.0, 0
         fixed = None if reconfigurable else \
             mapper.best_fixed_mapping(layers, hw.rows, hw.cols)
         for l in layers:
@@ -150,12 +169,17 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
             if fixed is not None:
                 from repro.core import dataflow
                 mappings[l.name] = fixed
-                cycles_by_name[l.name] = dataflow.cycles_generic(
+                cyc = dataflow.cycles_generic(
                     l, fixed, hw.rows, hw.cols, fixed_wiring=True)
+                cycles_by_name[l.name] = cyc
+                util_sum += l.macs / (cyc * hw.rows * hw.cols)
             else:
-                mc = mapper.best_mapping(l, hw.rows, hw.cols, memo=memo)
+                mc = mapper.best_mapping(l, hw.rows, hw.cols, memo=memo,
+                                         spatial_mode=spatial_mode)
                 mappings[l.name] = mc.mapping
                 cycles_by_name[l.name] = mc.cycles
+                util_sum += mc.utilization
+            util_n += 1
 
     # 2. fusion partition (DP)
     with perf.phase("partition"):
@@ -231,7 +255,7 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
               "static_mw": hw.static_mw,
               "hierarchy": hw.hierarchy.to_json()}
     with perf.phase("key"):
-        key = cache_mod.schedule_key(layers, hw, tile_mode)
+        key = cache_mod.schedule_key(layers, hw, tile_mode, spatial_mode)
     sched = Schedule(
         version=cache_mod.SEARCH_VERSION, workload=workload,
         key=key,
@@ -243,7 +267,7 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                     for e in part.edges),
         tiles=tiles, lowered=lowered, cost={},
         fixed_wiring=not reconfigurable, tile_mode=tile_mode,
-        placements=placements)
+        spatial_mode=spatial_mode, placements=placements)
 
     # 6. headline numbers under the shared accounting, plus the
     #    tile-aware (ragged-edge) variant used to compare candidate
@@ -270,5 +294,8 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                       "energy_tiled_j": en_t, "edp_tiled": en_t * lat_t,
                       "sram_tiled_bytes": float(sum(
                           lc.traffic.get(stream, 0)
-                          for lc in nct.layers))}
+                          for lc in nct.layers)),
+                      # mean spatial utilization over MAC layers — the
+                      # number the factored mapspace exists to raise
+                      "spatial_util": util_sum / util_n if util_n else 0.0}
     return sched

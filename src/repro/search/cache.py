@@ -27,21 +27,25 @@ from repro.core.workload import Layer
 #     cache keys hash the ordered layer-signature list + the HWSpec
 #     content signature (stable across cosmetic layer renames /
 #     annotation changes, which never affect the searched schedule)
-SEARCH_VERSION = 4
+# v5: factored spatial mappings with row/col replication (mappings may
+#     carry the per-axis ((dim, factor), ...) form); ``spatial_mode``
+#     is a search dimension hashed into the key
+SEARCH_VERSION = 5
 
 
 def schedule_key(layers: List[Layer], hw: HWSpec,
-                 tile_mode: str = "full") -> str:
+                 tile_mode: str = "full",
+                 spatial_mode: str = "factored") -> str:
     """Content hash identifying one search problem: the ordered list of
     canonical layer signatures (op/dims only — layer *names* and graph
     annotations never reach a scheduler decision, so a cosmetic rename
-    keeps the key), the HWSpec content signature, and the tile-candidate
-    mode (a search dimension: a pow2-ablation schedule must never be
-    replayed as a full-enumeration result)."""
+    keeps the key), the HWSpec content signature, and the tile- and
+    spatial-mapspace modes (search dimensions: an ablation schedule
+    must never be replayed as a full-enumeration result)."""
     blob = json.dumps(
         {"v": SEARCH_VERSION, "hw": hw.signature,
          "layers": [l.signature for l in layers],
-         "tile_mode": tile_mode},
+         "tile_mode": tile_mode, "spatial_mode": spatial_mode},
         sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
@@ -58,6 +62,7 @@ def save_schedule(schedule, path: Path) -> Path:
 def load_schedule(path: Path) -> Optional["object"]:
     """Load a schedule artifact back.  Returns a Schedule, or None if the
     file is unreadable / from a different search version."""
+    from repro.core.dataflow import as_mapping
     from repro.search.auto import Schedule
     try:
         raw = json.loads(Path(path).read_text())
@@ -69,7 +74,8 @@ def load_schedule(path: Path) -> Optional["object"]:
         return Schedule(
             version=raw["version"], workload=raw["workload"],
             key=raw["key"], hw=raw["hw"],
-            mappings={k: tuple(v) for k, v in raw["mappings"].items()},
+            mappings={k: as_mapping(v)
+                      for k, v in raw["mappings"].items()},
             orders={k: tuple(v) for k, v in raw["orders"].items()},
             fused_nonlinear=tuple(raw["fused_nonlinear"]),
             groups=tuple(tuple(g) for g in raw["groups"]),
@@ -77,9 +83,13 @@ def load_schedule(path: Path) -> Optional["object"]:
             tiles=raw["tiles"], lowered=raw["lowered"], cost=raw["cost"],
             fixed_wiring=raw.get("fixed_wiring", False),
             tile_mode=raw.get("tile_mode", "full"),
+            spatial_mode=raw.get("spatial_mode", "factored"),
             placements={k: dict(v) for k, v in
                         raw.get("placements", {}).items()})
-    except (KeyError, TypeError):
+    except (KeyError, TypeError, ValueError):
+        # ValueError: a corrupt mapping value (malformed factored axis /
+        # non-numeric factor) surfaced by as_mapping — same contract as
+        # any other unreadable artifact: None, caller re-searches
         return None
 
 
@@ -125,15 +135,17 @@ def _remap_layer_names(sched, layers: List[Layer]):
 def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                   workload: str = "custom",
                   cache_dir: Optional[Path] = None,
-                  refresh: bool = False):
+                  refresh: bool = False,
+                  spatial_mode: str = "factored"):
     """Run (or replay) the auto-scheduler through the artifact cache.
     Replayed artifacts are name-remapped onto the request's layers (the
     content-hashed key is rename-stable by design)."""
     from repro.search.auto import auto_schedule
     hw = hw or HWSpec()
     if cache_dir is None:
-        return auto_schedule(layers, hw, workload=workload)
-    key = schedule_key(layers, hw)
+        return auto_schedule(layers, hw, workload=workload,
+                             spatial_mode=spatial_mode)
+    key = schedule_key(layers, hw, spatial_mode=spatial_mode)
     path = Path(cache_dir) / f"{workload}-{key}.json"
     if not refresh and path.exists():
         sched = load_schedule(path)
@@ -141,6 +153,7 @@ def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
             sched = _remap_layer_names(sched, layers)
             if sched is not None:
                 return sched
-    sched = auto_schedule(layers, hw, workload=workload)
+    sched = auto_schedule(layers, hw, workload=workload,
+                          spatial_mode=spatial_mode)
     save_schedule(sched, path)
     return sched

@@ -102,24 +102,33 @@ def _point(hw: HWSpec, sched: Schedule,
         schedule=sched, mem=mem)
 
 
-def _schedule_variant(args) -> Schedule:
-    """Process-pool worker: one variant, own memo (module-level so it
-    pickles under the spawn start method too)."""
-    layers, hw, workload, dedup = args
-    return auto_schedule(layers, hw, workload=workload, dedup=dedup)
+def _schedule_variant(args):
+    """Process-pool worker: one variant, own memo + own recorder
+    (module-level so it pickles under the spawn start method too).
+    Returns ``(schedule, phase_s, counters)`` — the recorder's raw
+    tables ride back over the pickle boundary so the caller can merge
+    them instead of losing the workers' profile."""
+    layers, hw, workload, dedup, spatial_mode = args
+    wperf = PerfRecorder()
+    sched = auto_schedule(layers, hw, workload=workload, dedup=dedup,
+                          spatial_mode=spatial_mode, perf=wperf)
+    return sched, wperf.phase_s, wperf.counters
 
 
 def _schedule_variants(layers: List[Layer], variants: Sequence[HWSpec],
                        workload: str, dedup: bool,
                        memo: Optional[SearchMemo],
                        perf: Optional[PerfRecorder],
-                       parallel: int) -> List[Schedule]:
+                       parallel: int,
+                       spatial_mode: str = "factored") -> List[Schedule]:
     """One Schedule per variant — serially through a sweep-wide shared
-    memo (incremental re-costing), or fanned out over a process pool
-    (each worker dedups within its own variant; a caller-supplied memo
-    cannot cross process boundaries, so passing one with ``parallel`` is
-    an error rather than a silent drop, and ``perf`` collects no phase
-    rows from workers)."""
+    memo (incremental re-costing), or fanned out over a process pool.
+    Each pool worker dedups within its own variant and ships its
+    ``PerfRecorder`` tables back with the schedule; the caller's
+    ``perf`` merges them, so ``--profile --jobs N`` reports real phase
+    times and memo counters (a caller-supplied memo still cannot cross
+    process boundaries — passing one with ``parallel`` stays an error
+    rather than a silent drop)."""
     if parallel > 1:
         if memo is not None:
             raise ValueError("parallel sweeps cannot share a caller-"
@@ -127,28 +136,36 @@ def _schedule_variants(layers: List[Layer], variants: Sequence[HWSpec],
                              "memo= or run serially")
         from concurrent.futures import ProcessPoolExecutor
         with ProcessPoolExecutor(max_workers=parallel) as ex:
-            return list(ex.map(
+            results = list(ex.map(
                 _schedule_variant,
-                [(layers, hw, workload, dedup) for hw in variants]))
+                [(layers, hw, workload, dedup, spatial_mode)
+                 for hw in variants]))
+        if perf is not None:
+            for _, phase_s, counters in results:
+                perf.merge(phase_s, counters)
+        return [sched for sched, _, _ in results]
     if memo is None and dedup:
         memo = SearchMemo(perf=perf)
     return [auto_schedule(layers, hw, workload=workload, dedup=dedup,
-                          memo=memo, perf=perf) for hw in variants]
+                          spatial_mode=spatial_mode, memo=memo, perf=perf)
+            for hw in variants]
 
 
 def sweep(layers: List[Layer], variants: Optional[Iterable[HWSpec]] = None,
           *, workload: str = "custom", dedup: bool = True,
           memo: Optional[SearchMemo] = None,
           perf: Optional[PerfRecorder] = None,
-          parallel: int = 0) -> List[DsePoint]:
+          parallel: int = 0,
+          spatial_mode: str = "factored") -> List[DsePoint]:
     """Run the auto-scheduler on every HW variant.  All variants share
     one ``SearchMemo`` (pass ``memo`` to extend the sharing across
     sweeps, ``dedup=False`` for the brute-force baseline, ``parallel=N``
     for a process-pool fan-out, ``perf`` to collect phase times and memo
-    hit rates across the whole sweep)."""
+    hit rates across the whole sweep — parallel workers merge theirs
+    back, ``spatial_mode="pair"`` for the pair-only ablation)."""
     hws = list(variants if variants is not None else hw_variants())
     scheds = _schedule_variants(layers, hws, workload, dedup, memo, perf,
-                                parallel)
+                                parallel, spatial_mode)
     return [_point(hw, sched) for hw, sched in zip(hws, scheds)]
 
 
@@ -190,7 +207,8 @@ def sweep_memory(layers: List[Layer], base: Optional[HWSpec] = None, *,
                  workload: str = "custom", dedup: bool = True,
                  memo: Optional[SearchMemo] = None,
                  perf: Optional[PerfRecorder] = None,
-                 parallel: int = 0) -> List[DsePoint]:
+                 parallel: int = 0,
+                 spatial_mode: str = "factored") -> List[DsePoint]:
     """Run the auto-scheduler over a hierarchy-sizing grid; points are
     labeled by their per-level byte assignment (e.g. ``rf32k-sram256k``).
     Incremental: the sweep-wide shared memo re-uses every sub-result
@@ -200,7 +218,7 @@ def sweep_memory(layers: List[Layer], base: Optional[HWSpec] = None, *,
     base = base or HWSpec()
     hws = memory_variants(base, sizings=sizings)
     scheds = _schedule_variants(layers, hws, workload, dedup, memo, perf,
-                                parallel)
+                                parallel, spatial_mode)
     return [_point(hw, sched,
                    mem=tuple((l.name, l.bytes)
                              for l in hw.hierarchy.levels

@@ -86,12 +86,17 @@ def lower_ibn(expand: Layer, project: Layer, *, local_buffer: int,
     if tile_x is None or tile_c is None:
         ft = tiler.optimize_tile(expand, project,
                                  local_buffer=local_buffer)
-        if ft is None:      # no feasible abstract tile: minimal blocks
-            bm, bf = _SUBLANE, min(128, _pow2_floor(F))
+        if ft is None:      # no feasible abstract tile: minimal blocks,
+            #                 still snapped so a sub-sublane extent (e.g.
+            #                 7 pixels) never gets a block larger than
+            #                 its padded extent with ragged metadata
+            #                 that contradicts the actual launch
+            bm, rm = _snap(_SUBLANE, _SUBLANE, _MAX_BLOCK_M, n_pix)
+            bf, rf = _snap(128, _SUBLANE, 128, F)
             return LoweredKernel("fused_ibn",
                                  (expand.name, project.name),
                                  {"block_m": bm, "block_f": bf},
-                                 {"m": n_pix % bm, "f": F % bf})
+                                 {"m": rm, "f": rf})
         tile_x, tile_c = ft.tile_x, ft.tile_c
     bm, rm = _snap(tile_x, _SUBLANE, _MAX_BLOCK_M, n_pix)
     bf, rf = _snap(tile_c, _SUBLANE, _MAX_BLOCK_F, F)

@@ -5,8 +5,16 @@ pixelwise temporal re-ordering; this module opens the full space:
 
   spatial  : any ordered pair of loop dims (row_dim, col_dim) unrolled
              over a parametric rows x cols PE array — the legacy trio is
-             three points of the ~42-point space.  Costed with
-             ``core.dataflow.cycles_generic``.
+             three points of the ~42-point space — plus *factored*
+             assignments (``spatial_mode="factored"``, the default):
+             each axis takes an ordered (dim, factor) tuple whose
+             product fits the axis (e.g. 4xOX * 4xK on 16 rows), so a
+             layer whose best dim is smaller than the array replicates
+             the residual slots onto a second dim instead of stranding
+             PEs.  Costed with ``core.dataflow.cycles_generic`` /
+             ``cycles_factored``; ``spatial_mode="pair"`` is the
+             pair-only ablation (bit-identical to the pre-factored
+             search).
   temporal : permutations of the three macro loops (X = pixels,
              K = output channels, C = reduction), tiled against the
              PE-coupled buffer budgets of the ``MemoryHierarchy``
@@ -44,40 +52,187 @@ GenericMapping = Tuple[str, str]
 # ---------------------------------------------------------------------------
 
 
+SPATIAL_MODES = ("factored", "pair")
+
+
 @dataclasses.dataclass(frozen=True)
 class MappingChoice:
-    mapping: GenericMapping
+    # a (row_dim, col_dim) pair, or a factored per-axis
+    # ((dim, factor), ...) assignment when that strictly wins
+    mapping: Tuple
     cycles: int
     utilization: float
 
 
 def enumerate_mappings(layer: Layer) -> Iterator[GenericMapping]:
-    """All ordered dim pairs worth unrolling for this layer (dims of
-    extent 1 are skipped as row/col candidates — unrolling them is a
-    no-op the temporal loops already cover)."""
+    """All ordered dim pairs worth unrolling for this layer.  Degenerate
+    dims (extent 1 — including dims the op does not carry, e.g. K on
+    depthwise) are skipped up front: unrolling them is a no-op the
+    temporal loops already cover, so they never consume enumeration
+    slots.  A layer with fewer than two non-degenerate dims still
+    yields a non-empty set — the lone useful dim (or the leading
+    spatial dims outright) padded with one no-op partner, so every MAC
+    layer of every workload has a valid, non-raising mapping."""
     sizes = dataflow.dim_sizes(layer)
     useful = [d for d in dataflow.SPATIAL_DIMS if sizes[d] > 1]
+    if len(useful) >= 2:
+        yield from itertools.permutations(useful, 2)
+        return
+    if not useful:                      # fully degenerate (1x1 MAC)
+        yield from itertools.permutations(dataflow.SPATIAL_DIMS[:2])
+        return
+    partner = next(d for d in dataflow.SPATIAL_DIMS if d != useful[0])
+    yield from itertools.permutations((useful[0], partner))
+
+
+def _factor_menu(size: int, axis_len: int) -> List[int]:
+    """Per-dim unroll factors worth trying inside a factored axis:
+    powers of two below the axis (a full-axis factor is the single-dim
+    case) plus the exact-extent replication pivot for a dim smaller
+    than the axis.  Factors beyond the extent are dominated (same
+    ceil, more slots burned) and skipped."""
+    out = []
+    f = 2
+    while f < axis_len and f < size:
+        out.append(f)
+        f *= 2
+    if 2 <= size < axis_len and size not in out:
+        out.append(size)
+    return out
+
+
+def _axis_options(sizes: Dict[str, int], red: frozenset, useful: List[str],
+                  axis_len: int) -> List[Tuple[Tuple[str, int], ...]]:
+    """Factored candidates for one axis: every single-dim full-axis
+    unrolling plus every legal two-dim split — ordered (d1, d2) with d1
+    non-reduction (the accumulation wiring needs contiguous segments,
+    so a reduction dim can only sit innermost; see
+    ``dataflow.factored_legal``)."""
+    opts: List[Tuple[Tuple[str, int], ...]] = \
+        [((d, axis_len),) for d in useful]
+    for d1 in useful:
+        if d1 in red:
+            continue
+        menu1 = _factor_menu(sizes[d1], axis_len)
+        for d2 in useful:
+            if d2 == d1:
+                continue
+            menu2 = _factor_menu(sizes[d2], axis_len)
+            for f1 in menu1:
+                for f2 in menu2:
+                    if f1 * f2 <= axis_len:
+                        opts.append(((d1, f1), (d2, f2)))
+    return opts
+
+
+def _best_factored(layer: Layer, rows: int, cols: int,
+                   incumbent: MappingChoice) -> MappingChoice:
+    """Scan the factored mapspace for a candidate strictly beating the
+    pair ``incumbent`` (ties keep the pair — a degenerate factored
+    search must reproduce the pair schedule bit for bit).
+
+    Dominance pruning, exact at every step:
+      * ``ceil(prod(dims) / (rows * cols))`` is the global cycle floor
+        of ANY spatial mapping; an incumbent already there skips the
+        whole scan (most large pwconv/matmul layers), and reaching it
+        mid-scan stops early;
+      * after fixing the row axis, applying any column assignment
+        divides the remaining count by at most ``cols`` (factor
+        products fit the axis, counts are integers), so
+        ``ceil(partial / cols)`` lower-bounds every column option;
+      * the inner loop composes ceil-divisions incrementally via
+        ``ceil(ceil(s/a)/b) == ceil(s/(a*b))`` — no per-candidate dict
+        building.
+    """
+    sizes = dataflow.dim_sizes(layer)
+    red = frozenset(dataflow.reduction_dims(layer))
+    useful = [d for d in dataflow.SPATIAL_DIMS if sizes[d] > 1]
     if len(useful) < 2:
-        useful = list(dataflow.SPATIAL_DIMS[:2]) if not useful else \
-            useful + [d for d in dataflow.SPATIAL_DIMS if d != useful[0]][:1]
-    yield from itertools.permutations(useful, 2)
+        return incumbent                # nothing to factor
+    dims = list(dataflow.SPATIAL_DIMS)
+    s_all = [sizes[d] for d in dims]
+    total = 1
+    for s in s_all:
+        total *= s
+    floor_cyc = -(-total // (rows * cols))
+    best_cyc = incumbent.cycles
+    if best_cyc <= floor_cyc:
+        return incumbent                # the pair space is already optimal
+    idx = {d: i for i, d in enumerate(dims)}
+    # column options pre-resolved to (axis, [(dim index, factor)],
+    # reduction dims) so the hot loop runs on ints
+    cols_pre = [(ca, [(idx[d], f) for d, f in ca],
+                 [d for d, _ in ca if d in red])
+                for ca in _axis_options(sizes, red, useful, cols)]
+    # row options sorted by their post-unroll partial product (stable, so
+    # equal partials keep enumeration order): the per-row lower bound
+    # ceil(partial / cols) is then monotone and the scan BREAKS at the
+    # first row that cannot beat the incumbent instead of filtering
+    rows_pre = []
+    for ra in _axis_options(sizes, red, useful, rows):
+        rem = list(s_all)
+        for d, f in ra:
+            i = idx[d]
+            rem[i] = -(-rem[i] // f)
+        partial = 1
+        for r in rem:
+            partial *= r
+        rows_pre.append((partial, ra, rem,
+                         [d for d, _ in ra if d in red]))
+    rows_pre.sort(key=lambda t: t[0])
+    best_fm: Optional[Tuple] = None
+    for partial, ra, rem, r_red in rows_pre:
+        if -(-partial // cols) > best_cyc:
+            break
+        for ca, cf, c_red in cols_pre:
+            # a reduction dim never splits across both axes
+            if r_red and c_red and any(d in r_red for d in c_red):
+                continue
+            cyc = partial
+            for i, f in cf:
+                r = rem[i]
+                cyc = cyc // r * (-(-r // f))
+            if cyc < best_cyc or (cyc == best_cyc and best_fm is not None
+                                  and (ra, ca) < best_fm):
+                best_cyc = cyc
+                best_fm = (ra, ca)
+        if best_cyc <= floor_cyc:
+            break                       # nothing can rank lower
+    if best_fm is None:
+        return incumbent
+    return MappingChoice(best_fm, best_cyc,
+                         layer.macs / (best_cyc * rows * cols))
 
 
 def best_mapping(layer: Layer, rows: int = 16, cols: int = 16, *,
                  fixed_wiring: bool = False,
+                 spatial_mode: str = "factored",
                  memo=None) -> MappingChoice:
     """Min-cycle spatial mapping for one layer (deterministic ties).
+
+    ``spatial_mode="factored"`` (default) extends the ordered-pair
+    space with factored row/col assignments; a factored mapping is
+    returned only when it strictly beats every pair (equal-cycle ties
+    keep the pair, so a degenerate factored search IS the pair search).
+    ``spatial_mode="pair"`` is the pair-only ablation.  The
+    non-reconfigurable fixed-wiring array cannot segment its hard-wired
+    column adder tree, so it always searches pairs only.
 
     ``memo`` (a ``search.memo.SearchMemo``) keys the result by the
     layer's content signature — independent of the memory hierarchy, so
     one entry serves every repeat of the shape in the network *and*
     every memory-sizing variant of a DSE sweep."""
     assert layer.op in MAC_OPS, layer.op
+    if spatial_mode not in SPATIAL_MODES:
+        raise ValueError(f"unknown spatial_mode {spatial_mode!r}; "
+                         f"choose from {SPATIAL_MODES}")
     if memo is not None:
         return memo.lookup(
-            "spatial", (layer.signature, rows, cols, fixed_wiring),
+            "spatial",
+            (layer.signature, rows, cols, fixed_wiring, spatial_mode),
             lambda: best_mapping(layer, rows, cols,
-                                 fixed_wiring=fixed_wiring))
+                                 fixed_wiring=fixed_wiring,
+                                 spatial_mode=spatial_mode))
     best: Optional[MappingChoice] = None
     for m in enumerate_mappings(layer):
         cyc = dataflow.cycles_generic(layer, m, rows, cols,
@@ -86,6 +241,8 @@ def best_mapping(layer: Layer, rows: int = 16, cols: int = 16, *,
             best = MappingChoice(m, cyc,
                                  layer.macs / (cyc * rows * cols))
     assert best is not None
+    if spatial_mode == "factored" and not fixed_wiring:
+        best = _best_factored(layer, rows, cols, best)
     return best
 
 

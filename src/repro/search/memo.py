@@ -9,8 +9,9 @@ hash, independent of layer name and position) plus the slice of the
 hardware the sub-result actually reads — so each unique subproblem is
 solved once and fanned back out:
 
-  spatial     best spatial mapping per (layer_sig, rows, cols, wiring)
-              — independent of the memory hierarchy, so a memory-sizing
+  spatial     best spatial mapping per (layer_sig, rows, cols, wiring,
+              spatial_mode) — pair or factored per-axis assignments —
+              independent of the memory hierarchy, so a memory-sizing
               sweep reuses every entry across all its variants.
   table       the temporal-mapspace candidate table per (layer_sig,
               innermost buffer capacities, tile_mode) — the tile sizes,

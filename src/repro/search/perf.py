@@ -42,6 +42,17 @@ class PerfRecorder:
     def count(self, key: str, n: int = 1) -> None:
         self.counters[key] = self.counters.get(key, 0) + n
 
+    def merge(self, phase_s: Dict[str, float],
+              counters: Dict[str, int]) -> None:
+        """Fold another recorder's raw tables into this one — how a
+        parallel sweep's per-worker recorders (serialized back as plain
+        dicts across the process boundary) accumulate into the caller's
+        recorder instead of being dropped."""
+        for k, v in phase_s.items():
+            self.phase_s[k] = self.phase_s.get(k, 0.0) + v
+        for k, v in counters.items():
+            self.count(k, v)
+
     # -- derived ------------------------------------------------------
 
     @property

@@ -365,26 +365,26 @@ def test_schedule_json_roundtrip(tmp_path):
     assert back.hw["hierarchy"]["levels"][0]["name"] == "rf"
 
 
-def test_stale_v3_artifacts_rejected(tmp_path):
-    """A SEARCH_VERSION=3 cache entry must never be replayed as a v4
+def test_stale_v4_artifacts_rejected(tmp_path):
+    """A SEARCH_VERSION=4 cache entry must never be replayed as a v5
     result: load_schedule refuses it and cached_search re-searches.
-    (v4: placement-aware traffic rows + signature-based cache keys.)"""
+    (v5: factored spatial mappings; spatial_mode hashed into the key.)"""
     from repro.search.cache import SEARCH_VERSION, schedule_key
-    assert SEARCH_VERSION == 4
+    assert SEARCH_VERSION == 5
     wl = edgenext_workload(reduced_edgenext())
     key = schedule_key(wl, HW)
     path = tmp_path / f"edgenext-reduced-{key}.json"
     save_schedule(SCHED, path)
     doc = json.loads(path.read_text())
-    doc["version"] = 3                   # a stale v3 artifact at the
-    path.write_text(json.dumps(doc))     # exact v4 cache path
+    doc["version"] = 4                   # a stale v4 artifact at the
+    path.write_text(json.dumps(doc))     # exact v5 cache path
     assert load_schedule(path) is None
     sched = cached_search(wl, HW, workload="edgenext-reduced",
                           cache_dir=tmp_path)
-    assert sched.version == 4
+    assert sched.version == 5
     assert sched.workload == "edgenext-reduced"
     # the refreshed artifact replaced the stale one
-    assert json.loads(path.read_text())["version"] == 4
+    assert json.loads(path.read_text())["version"] == 5
 
 
 def test_schedule_places_every_mac_layer():
@@ -529,6 +529,98 @@ def test_lowered_matmul_ln_matches_ref():
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(ref.matmul_ln_ref(x, w, b, g, be)),
         rtol=3e-5, atol=3e-5)
+
+
+def test_snap_subsublane_never_exceeds_extent():
+    """Regression: for extents below the 8-row sublane (late-stage
+    7-pixel rows) every emitted block must fit the extent, with the
+    ragged metadata matching the launch — including the infeasible-
+    buffer fallback of lower_ibn, which used to emit a raw 8-row block
+    against a 7-row extent (larger than the padded extent it claimed)."""
+    for ext in (1, 2, 3, 5, 7):
+        b, r = lower._snap(64, lower._SUBLANE, 256, ext)
+        assert 1 <= b <= ext, (ext, b)
+        assert r == ext % b, (ext, b, r)
+    exp = Layer("e", "pwconv", k=304, c=160, ox=7)
+    proj = Layer("p", "pwconv", k=160, c=304, ox=7)
+    for buf in (0, HW.output_rf_bytes):    # fallback + searched paths
+        lk = lower.lower_ibn(exp, proj, local_buffer=buf)
+        assert lk.params["block_m"] <= 7, (buf, lk.params)
+        assert lk.ragged["m"] == 7 % lk.params["block_m"], (buf, lk)
+        assert lk.ragged["f"] == 304 % lk.params["block_f"], (buf, lk)
+
+
+def test_subsublane_ibn_oracle():
+    """In-kernel mask oracle at a sub-sublane pixel extent: the lowered
+    fused_ibn blocks for a 7-pixel IBN must reproduce the reference
+    exactly (the padded rows/columns contribute nothing)."""
+    import jax
+    from repro.kernels import ops, ref
+
+    exp = Layer("e", "pwconv", k=52, c=40, ox=7)
+    proj = Layer("p", "pwconv", k=40, c=52, ox=7)
+    lk = lower.lower_ibn(exp, proj, local_buffer=HW.output_rf_bytes)
+    assert lk.params["block_m"] <= 7
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = jax.random.normal(ks[0], (7, 40))
+    w1 = jax.random.normal(ks[1], (40, 52)) * 0.1
+    w2 = jax.random.normal(ks[2], (52, 40)) * 0.1
+    out = ops.fused_ibn(x, w1, w2, block_m=lk.params["block_m"],
+                        block_f=lk.params["block_f"])
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.fused_ibn_ref(x, w1, w2)),
+        rtol=3e-5, atol=3e-5)
+
+
+def test_subsublane_matmul_ln_oracle():
+    """7 pixel rows x 13-wide reduction: both the row block and the
+    ragged final reduction block sit below the sublane; the masked
+    kernel must still match the reference (no over-read, no stats
+    contamination from the padding)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+
+    mac = Layer("m", "pwconv", k=24, c=13, ox=7)
+    norm = Layer("n", "norm", c=24, ox=7)
+    lk = lower.lower_matmul_ln(mac, norm, tile_x=7, tile_c=13)
+    assert lk.params["block_m"] <= 7
+    assert lk.params["block_k"] <= 13
+    assert lk.ragged["m"] == 7 % lk.params["block_m"]
+    assert lk.ragged["k"] == 13 % lk.params["block_k"]
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    x = jax.random.normal(ks[0], (7, 13))
+    w = jax.random.normal(ks[1], (13, 24)) * 0.1
+    b = jax.random.normal(ks[2], (24,)) * 0.1
+    g, be = jnp.ones((24,)), jnp.zeros((24,))
+    out = ops.matmul_ln(x, w, b, g, be, block_m=lk.params["block_m"],
+                        block_k=lk.params["block_k"])
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.matmul_ln_ref(x, w, b, g, be)),
+        rtol=3e-5, atol=3e-5)
+
+
+def test_subsublane_attention_oracle():
+    """7-token sequence through the lowered flash-attention blocks: the
+    online softmax over a ragged sub-sublane kv extent must match the
+    reference (kv_len masks the padded keys)."""
+    import jax
+    from repro.kernels import ops, ref
+
+    qk = Layer("qk", "matmul", b=2, k=7, c=8, ox=7)
+    lk = lower.lower_attention(qk, tile_x=4, seq=7)
+    assert lk.params["block_q"] <= 7 and lk.params["block_k"] <= 7
+    assert lk.ragged["q"] == 7 % lk.params["block_q"]
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (1, 2, 7, 8))
+    k = jax.random.normal(ks[1], (1, 2, 7, 8))
+    v = jax.random.normal(ks[2], (1, 2, 7, 8))
+    out = ops.flash_attention(q, k, v, causal=False,
+                              block_q=lk.params["block_q"],
+                              block_k=lk.params["block_k"])
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
 
 
 def test_lowered_attention_matches_ref():

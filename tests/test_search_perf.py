@@ -321,14 +321,26 @@ def test_sweep_memory_dedup_matches_brute():
 
 
 def test_sweep_memory_parallel_matches_serial():
+    """Process-pool fan-out returns the same points as serial AND
+    merges the workers' PerfRecorder tables back (the --profile --jobs
+    fix): phase wall times and memo counters must be non-zero, not the
+    silently-empty recorder the pool used to leave behind."""
     wl = get_workload("edgenext-reduced")
     sizings = {"rf": (16 * KB, 32 * KB)}
     serial = sweep_memory(wl, HW, sizings=sizings)
-    par = sweep_memory(wl, HW, sizings=sizings, parallel=2)
+    perf = PerfRecorder()
+    par = sweep_memory(wl, HW, sizings=sizings, parallel=2, perf=perf)
     assert [p.label for p in par] == [p.label for p in serial]
     for a, b in zip(par, serial):
         assert dataclasses.asdict(a.schedule) == \
             dataclasses.asdict(b.schedule)
+    # merged worker profiles: every search phase accumulated real time
+    for phase in ("spatial", "partition", "temporal", "evaluate"):
+        assert perf.phase_s.get(phase, 0.0) > 0.0, (phase, perf.phase_s)
+    hits = sum(v for k, v in perf.counters.items() if k.endswith(".hit"))
+    miss = sum(v for k, v in perf.counters.items() if k.endswith(".miss"))
+    assert hits + miss > 0 and perf.hit_rate() > 0.0
+    assert perf.rows("perf")               # renders as BENCH/CLI rows
 
 
 def test_shared_memo_accumulates_across_variants():
@@ -344,6 +356,18 @@ def test_shared_memo_accumulates_across_variants():
     # sram-only sweep keeps the rf residence budget: per-capacity group
     # tiles from variant 1 serve variant 2 entirely
     assert c["memo.group_tile.hit"] > c["memo.group_tile.miss"]
+
+
+def test_caller_supplied_memo_reports_to_caller_perf():
+    """Passing BOTH memo= and perf= (the documented cross-sweep
+    sharing) must land the memo hit/miss counters on the caller's
+    recorder, not the memo's private default one."""
+    wl = get_workload("edgenext-reduced")
+    memo, perf = SearchMemo(), PerfRecorder()
+    sweep_memory(wl, HW, sizings={"sram": (256 * KB, 512 * KB)},
+                 memo=memo, perf=perf)
+    assert perf.counters and perf.hit_rate() > 0.0, perf.counters
+    assert perf.counters.get("memo.spatial.hit", 0) > 0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,292 @@
+"""Factored spatial mappings: legality, cycle math, ablation pins.
+
+The load-bearing claims of the factored mapspace:
+  * cycles/legality: ``cycles_factored`` is the plain ceil product over
+    per-dim unroll factors, reduction wiring is legal per axis segment
+    (reduction dim innermost, one per axis, never split across axes),
+    and the fixed-wiring column tree voids non-reduction col factors;
+  * degenerate mappings never raise: every layer of all 9 registered
+    workloads yields a non-empty, non-raising mapping set, and a
+    mapping dim the layer does not carry is a no-op, not an error;
+  * the factored space never loses to the pair space (ties keep the
+    pair) and strictly wins on the depthwise/small-dim layers — mean
+    spatial utilization improves;
+  * equivalence pin: ``spatial_mode="pair"`` reproduces the
+    SEARCH_VERSION=4 search bit for bit (dedup on AND off) — the pair
+    golden snapshot is byte-identical to the retired v4 golden except
+    for the version field.
+"""
+import dataclasses
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.configs.edgenext_s import CONFIG
+from repro.core import dataflow
+from repro.core.costmodel import HWSpec
+from repro.core.workload import MAC_OPS, Layer, edgenext_workload
+from repro.search import (WORKLOADS, auto_schedule, evaluate_schedule,
+                          get_workload, load_schedule, save_schedule,
+                          schedule_key)
+from repro.search import mapper
+from repro.search.memo import SearchMemo
+
+HW = HWSpec()
+WL = edgenext_workload(CONFIG)
+
+
+# ---------------------------------------------------------------------------
+# factored cycle math + wiring legality
+# ---------------------------------------------------------------------------
+
+
+def test_factored_cycles_is_ceil_product():
+    """4xOX * 4xK on rows, 16xC on cols: every dim's unroll is the
+    product of its factors across axes; unmapped dims run temporally."""
+    l = Layer("l", "pwconv", k=24, c=40, ox=20, oy=3)
+    fm = ((("ox", 4), ("k", 4)), (("c", 16),))
+    want = 5 * 6 * -(-40 // 16) * 3          # ox/4, k/4, c/16, oy temporal
+    assert dataflow.cycles_factored(l, fm) == want
+    # a dim on both axes multiplies its factors (4x4 of OX)
+    fm2 = ((("ox", 4),), (("ox", 4),))
+    assert dataflow.cycles_factored(l, fm2) == -(-20 // 16) * 24 * 40 * 3
+    # pair-degenerate factored form == the pair cycles
+    assert dataflow.cycles_factored(l, ((("ox", 16),), (("c", 16),))) \
+        == dataflow.cycles_generic(l, ("ox", "c"))
+
+
+def test_factored_dispatch_through_cycles():
+    l = Layer("l", "pwconv", k=24, c=40, ox=20)
+    fm = ((("ox", 4), ("k", 4)), (("c", 16),))
+    assert dataflow.cycles(l, fm) == dataflow.cycles_factored(l, fm)
+    assert dataflow.is_factored(fm)
+    assert not dataflow.is_factored(("ox", "c"))
+    assert not dataflow.is_factored("OXC")
+    assert dataflow.mapping_label(fm) == "4xOX*4xK|16xC"
+    assert dataflow.mapping_label(("ox", "c")) == "OX|C"
+
+
+def test_factored_legality_per_axis_segment():
+    l = Layer("l", "pwconv", k=24, c=40, ox=20, fx=3)
+    red = dataflow.reduction_dims(l)
+    assert "c" in red and "fx" in red
+    # reduction dim must be the innermost (last) factor of its axis
+    assert dataflow.factored_legal(l, ((("ox", 4), ("c", 4)), (("k", 16),)))
+    assert not dataflow.factored_legal(
+        l, ((("c", 4), ("ox", 4)), (("k", 16),)))
+    # at most one reduction dim per axis
+    assert not dataflow.factored_legal(
+        l, ((("fx", 3), ("c", 4)), (("k", 16),)))
+    # a reduction dim never splits across both axes
+    assert not dataflow.factored_legal(l, ((("c", 4),), (("c", 4),)))
+    # factor product must fit the axis
+    assert not dataflow.factored_legal(l, ((("ox", 8), ("k", 4)), ()))
+    with pytest.raises(ValueError):
+        dataflow.cycles_factored(l, ((("c", 4), ("ox", 4)), (("k", 16),)))
+
+
+def test_factored_fixed_wiring_voids_nonreduction_col_segments():
+    """The hard-wired column adder tree: non-reduction column factors
+    are void (the dim runs temporally), reduction factors still bite —
+    the factored generalization of the pair rule."""
+    l = Layer("l", "pwconv", k=24, c=40, ox=20)
+    fm = ((("ox", 16),), (("k", 4), ("c", 4)))
+    got = dataflow.cycles_factored(l, fm, fixed_wiring=True)
+    assert got == -(-20 // 16) * 24 * -(-40 // 4)     # k void, c kept
+    assert dataflow.cycles_factored(l, fm) == \
+        -(-20 // 16) * -(-24 // 4) * -(-40 // 4)
+
+
+def test_spatial_utilization_generalizes_to_factored():
+    l = Layer("l", "matmul", b=4, k=12, c=784, ox=12)
+    pair = mapper.best_mapping(l, spatial_mode="pair")
+    fac = mapper.best_mapping(l, spatial_mode="factored")
+    assert fac.utilization >= pair.utilization
+    assert fac.utilization == pytest.approx(
+        dataflow.spatial_utilization(l, fac.mapping))
+
+
+# ---------------------------------------------------------------------------
+# degenerate mappings never raise (all 9 workloads)
+# ---------------------------------------------------------------------------
+
+
+def test_cycles_generic_tolerates_absent_dims():
+    """A mapping dim the layer does not carry is a degenerate (no-op)
+    unrolling, not an error — only row == col is rejected."""
+    l = Layer("l", "pwconv", k=24, c=40, ox=20)
+    base = dataflow.cycles_generic(l, ("ox", "c"))
+    assert dataflow.cycles_generic(l, ("ox", "z")) == \
+        -(-20 // 16) * 24 * 40
+    assert dataflow.cycles_generic(l, ("z", "q")) == 24 * 40 * 20
+    assert base == -(-20 // 16) * 24 * -(-40 // 16)
+    with pytest.raises(ValueError):
+        dataflow.cycles_generic(l, ("ox", "ox"))
+
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_every_layer_has_nonempty_nonraising_mappings(name):
+    """Satellite proof: every layer of every registered workload yields
+    a non-empty mapping set, none of whose members raise, and
+    best_mapping succeeds in both spatial modes for every MAC layer."""
+    memo = SearchMemo()
+    for l in get_workload(name):
+        ms = list(mapper.enumerate_mappings(l))
+        assert ms, l.name
+        sizes = dataflow.dim_sizes(l)
+        useful = [d for d in dataflow.SPATIAL_DIMS if sizes[d] > 1]
+        for m in ms:
+            dataflow.cycles_generic(l, m)          # must not raise
+            dataflow.cycles_generic(l, m, fixed_wiring=True)
+            if len(useful) >= 2:
+                # size-1 dims never consume enumeration slots
+                assert sizes[m[0]] > 1 and sizes[m[1]] > 1, (l.name, m)
+        if l.op in MAC_OPS:
+            for mode in ("pair", "factored"):
+                mc = mapper.best_mapping(l, HW.rows, HW.cols,
+                                         spatial_mode=mode, memo=memo)
+                assert mc.cycles * HW.rows * HW.cols >= l.macs
+                assert 0 < mc.utilization <= 1.0
+
+
+def test_fully_degenerate_layer_still_maps():
+    l = Layer("one", "pwconv")                     # every dim extent 1
+    assert list(mapper.enumerate_mappings(l))
+    mc = mapper.best_mapping(l)
+    assert mc.cycles == 1
+
+
+# ---------------------------------------------------------------------------
+# factored never loses; strictly wins on depthwise/small-dim layers
+# ---------------------------------------------------------------------------
+
+
+def test_factored_never_loses_ties_keep_pair():
+    memo = SearchMemo()
+    strict = 0
+    for l in WL:
+        if l.op not in MAC_OPS:
+            continue
+        pair = mapper.best_mapping(l, spatial_mode="pair", memo=memo)
+        fac = mapper.best_mapping(l, spatial_mode="factored", memo=memo)
+        assert fac.cycles <= pair.cycles, l.name
+        if fac.cycles == pair.cycles:
+            # a degenerate factored search IS the pair search
+            assert fac.mapping == pair.mapping, l.name
+        else:
+            strict += 1
+            assert dataflow.cycles_factored(l, fac.mapping, HW.rows,
+                                            HW.cols) == fac.cycles
+            assert dataflow.factored_legal(l, fac.mapping, HW.rows,
+                                           HW.cols)
+    assert strict > 0, "EdgeNeXt-S must have factored winners"
+
+
+def test_factored_schedule_beats_pair_on_edgenext():
+    """The acceptance criterion, as a test: factored EDP < pair EDP on
+    the depthwise-heavy EdgeNeXt-S, with higher mean utilization, and
+    the two modes hash to distinct schedule keys."""
+    fac = auto_schedule(WL, HW, workload="edgenext-s")
+    pair = auto_schedule(WL, HW, workload="edgenext-s",
+                         spatial_mode="pair")
+    assert fac.cost["edp"] < pair.cost["edp"]
+    assert fac.cost["spatial_util"] > pair.cost["spatial_util"]
+    assert fac.key != pair.key
+    assert fac.spatial_mode == "factored" and pair.spatial_mode == "pair"
+    assert any(dataflow.is_factored(m) for m in fac.mappings.values())
+    assert not any(dataflow.is_factored(m) for m in pair.mappings.values())
+    # evaluation replays the factored mappings consistently
+    nc = evaluate_schedule(WL, fac, HW)
+    assert nc.edp == pytest.approx(fac.cost["edp"])
+
+
+def test_unknown_spatial_mode_rejected():
+    with pytest.raises(ValueError):
+        mapper.best_mapping(WL[0] if WL[0].op in MAC_OPS else
+                            next(l for l in WL if l.op in MAC_OPS),
+                            spatial_mode="diagonal")
+
+
+# ---------------------------------------------------------------------------
+# equivalence pin: spatial_mode="pair" == the SEARCH_VERSION=4 search
+# ---------------------------------------------------------------------------
+
+
+def _v4_best_pair(layer):
+    """The retired v4 selection rule, reimplemented verbatim: min
+    (cycles, mapping) over the ordered-pair enumeration."""
+    best = None
+    for m in mapper.enumerate_mappings(layer):
+        cyc = dataflow.cycles_generic(layer, m, HW.rows, HW.cols)
+        if best is None or (cyc, m) < best:
+            best = (cyc, m)
+    return best[1]
+
+
+@pytest.mark.parametrize("name", WORKLOADS)
+def test_pair_mode_bit_identical_to_v4_selection(name):
+    """On every registered workload: pair-mode dedup-on and dedup-off
+    schedules are bit-identical, and every layer's mapping equals the
+    v4 argmin — the pre-factored search survives as the ablation."""
+    wl = get_workload(name)
+    fast = auto_schedule(wl, HW, workload=name, spatial_mode="pair",
+                         dedup=True)
+    brute = auto_schedule(wl, HW, workload=name, spatial_mode="pair",
+                          dedup=False)
+    assert dataclasses.asdict(fast) == dataclasses.asdict(brute)
+    by_name = {l.name: l for l in wl}
+    for lname, m in fast.mappings.items():
+        assert m == _v4_best_pair(by_name[lname]), lname
+
+
+def test_pair_golden_matches_v4_snapshot():
+    """The pair-mode EdgeNeXt-S schedule must reproduce the pair golden
+    snapshot — which is byte-identical to the retired SEARCH_VERSION=4
+    golden except for its version field (checked at generation time).
+    Regenerate after intentional cost-model changes with:
+      PYTHONPATH=src python -m repro.search --workload edgenext-s \
+          --spatial-mode pair \
+          --golden tests/golden/edgenext_s_schedule_pair.json
+    """
+    p = Path(__file__).parent / "golden" / "edgenext_s_schedule_pair.json"
+    gold = json.loads(p.read_text())
+    sched = auto_schedule(WL, HW, workload="edgenext-s",
+                          spatial_mode="pair")
+    assert gold["version"] == sched.version
+    assert [list(g) for g in sched.groups] == gold["groups"]
+    assert sched.tiles == gold["tiles"]
+    assert sched.cost["edp"] == pytest.approx(gold["cost"]["edp"])
+    assert sched.cost["edp_tiled"] == \
+        pytest.approx(gold["cost"]["edp_tiled"])
+
+
+def test_spatial_mode_is_a_search_dimension():
+    assert schedule_key(WL, HW) == schedule_key(WL, HW, "full", "factored")
+    assert schedule_key(WL, HW, "full", "pair") != schedule_key(WL, HW)
+
+
+# ---------------------------------------------------------------------------
+# serialization round-trip with factored mappings
+# ---------------------------------------------------------------------------
+
+
+def test_factored_schedule_json_roundtrip(tmp_path):
+    sched = auto_schedule(WL, HW, workload="edgenext-s")
+    assert any(dataflow.is_factored(m) for m in sched.mappings.values())
+    p = tmp_path / "sched.json"
+    save_schedule(sched, p)
+    back = load_schedule(p)
+    assert back is not None
+    assert back.key == sched.key
+    assert back.spatial_mode == "factored"
+    assert back.mappings == sched.mappings     # tuples, not JSON lists
+    nc = evaluate_schedule(WL, back, HW)
+    assert nc.edp == pytest.approx(sched.cost["edp"])
+
+
+def test_as_mapping_canonicalizes_json_forms():
+    assert dataflow.as_mapping("OXC") == "OXC"
+    assert dataflow.as_mapping(["ox", "c"]) == ("ox", "c")
+    assert dataflow.as_mapping([[["ox", 4], ["k", 4]], [["c", 16]]]) == \
+        ((("ox", 4), ("k", 4)), (("c", 16),))
