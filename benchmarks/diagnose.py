@@ -2,12 +2,8 @@
 
     PYTHONPATH=src:. python benchmarks/diagnose.py --arch X --shape Y [-n 12]
 """
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
-
 import argparse
+import os
 import re
 
 
@@ -61,4 +57,10 @@ def main():
 
 
 if __name__ == "__main__":
+    # set before main() imports repro.launch (which initializes jax) —
+    # kept out of module scope so importing this file stays side-effect
+    # free (no environment mutation on a mere ``import diagnose``)
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
     main()

@@ -267,3 +267,114 @@ def bench_search_perf() -> List[Row]:
     for rname, value, note in perf.rows("search.perf.mobilevit_s"):
         rows.append((rname, value, note))
     return rows
+
+
+def bench_obs() -> List[Row]:
+    """The observability section: ``search.obs.*``.
+
+    Three claims pinned into the BENCH trajectory:
+
+      * tracer overhead — ``overhead_frac`` is the fractional wall-time
+        cost of running ``auto_schedule`` under an active tracer vs the
+        no-op hook path (target < 0.05), with the traced and untraced
+        schedules asserted bit-identical;
+      * decision provenance — every counter/gauge a traced search emits
+        (mappings enumerated vs pruned, fusion spans probed vs cut, tile
+        budget rejections, kernel lowering mix) as its own row, so a
+        search-space regression shows up as a count change even when the
+        chosen schedule stays the same;
+      * cache replay outcomes — one scripted artifact-cache session
+        (miss -> store -> hit -> rename_remap -> version_reject ->
+        corrupt) with each structured ``cache.*`` outcome counter
+        reported, replacing the old silent-None replay surface.
+    """
+    import json
+    import shutil
+    import tempfile
+    from pathlib import Path
+
+    from repro import obs
+    from repro.search import get_workload
+    from repro.search.cache import SEARCH_VERSION, cached_search
+
+    rows: List[Row] = []
+    hw = HWSpec()
+    wl = get_workload("edgenext-reduced")
+
+    # tracing must never change a schedule (the cheap always-on check;
+    # the full-workload equivalence lives in tests/test_obs.py)
+    base = auto_schedule(wl, hw, workload="edgenext-reduced")
+    with obs.tracing():
+        traced = auto_schedule(wl, hw, workload="edgenext-reduced")
+    assert dataclasses.asdict(base) == dataclasses.asdict(traced), \
+        "tracing changed the searched schedule"
+
+    # overhead on the flagship workload (the ``search.perf.total_ms``
+    # denominator): CPU time (immune to scheduler preemption),
+    # multi-search batches (~40 ms per sample vs a ~1 ms noise floor),
+    # alternating which side goes first per rep (the process measurably
+    # warms up over its first batches — a fixed order hands the warmup
+    # penalty to one side and reads as fake overhead), min per side
+    wl_s = edgenext_workload(CONFIG)
+    batch = 3
+
+    def _off() -> float:
+        t0 = time.process_time()
+        for _ in range(batch):
+            auto_schedule(wl_s, hw, workload="edgenext-s")
+        return time.process_time() - t0
+
+    def _on() -> float:
+        t0 = time.process_time()
+        with obs.tracing():
+            for _ in range(batch):
+                auto_schedule(wl_s, hw, workload="edgenext-s")
+        return time.process_time() - t0
+
+    _off(), _on()                              # warmup, untimed
+    dt_off = dt_on = float("inf")
+    for rep in range(6):
+        first, second = (_off, _on) if rep % 2 == 0 else (_on, _off)
+        a, b = first(), second()
+        da, db = (a, b) if rep % 2 == 0 else (b, a)
+        dt_off, dt_on = min(dt_off, da), min(dt_on, db)
+    rows.append(("search.obs.overhead_frac",
+                 max(0.0, dt_on - dt_off) / dt_off,
+                 f"traced {dt_on * 1e3:.1f} ms vs untraced "
+                 f"{dt_off * 1e3:.1f} ms CPU over {batch}-search "
+                 f"edgenext-s batches, bit-identical; target < 0.05"))
+
+    # provenance counters/gauges of one traced search, as BENCH rows
+    with obs.tracing() as tracer:
+        auto_schedule(wl, hw, workload="edgenext-reduced")
+    rows.extend(obs.bench_rows(tracer))
+
+    # scripted cache session exercising every replay outcome once
+    tmp = Path(tempfile.mkdtemp(prefix="bench-obs-cache-"))
+    try:
+        with obs.tracing() as tr:
+            cached_search(wl, hw, workload="wl", cache_dir=tmp)  # miss+store
+            cached_search(wl, hw, workload="wl", cache_dir=tmp)  # hit
+            renamed = [dataclasses.replace(l, name=f"r{i}")
+                       for i, l in enumerate(wl)]
+            cached_search(renamed, hw, workload="wl",
+                          cache_dir=tmp)            # hit + rename_remap
+            art = next(tmp.glob("wl-*.json"))
+            doc = json.loads(art.read_text())
+            doc["version"] = SEARCH_VERSION - 1
+            art.write_text(json.dumps(doc))
+            cached_search(wl, hw, workload="wl",
+                          cache_dir=tmp)            # version_reject -> miss
+            art.write_text(art.read_text()[:40])
+            cached_search(wl, hw, workload="wl",
+                          cache_dir=tmp)            # corrupt -> miss
+        c = tr.counters
+        expect = {"hit": 2, "miss": 3, "store": 3, "rename_remap": 1,
+                  "version_reject": 1, "corrupt": 1}
+        for name, want in expect.items():
+            rows.append((f"search.obs.cache.{name}",
+                         float(c.get(f"cache.{name}", 0)),
+                         f"scripted replay session, expect {want}"))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows

@@ -61,6 +61,19 @@ def summary(tag: str = "") -> str:
     return "\n".join(lines)
 
 
+def md_schedule_explain(workload: str = "edgenext-reduced") -> str:
+    """The searched schedule of one (small) registered workload as the
+    ``repro.obs`` explain report — the same markdown ``--explain``
+    prints, so EXPERIMENTS.md carries the decision provenance next to
+    the dry-run tables."""
+    from repro.core.costmodel import HWSpec
+    from repro.obs import explain_schedule
+    from repro.search import auto_schedule, get_workload
+    wl = get_workload(workload)
+    sched = auto_schedule(wl, HWSpec(), workload=workload)
+    return explain_schedule(wl, sched)
+
+
 def main() -> None:
     print("## S Dry-run — baseline (pod1, 16x16, profile 2d)\n")
     print(md_dryrun("pod1"))
@@ -74,6 +87,8 @@ def main() -> None:
     print(md_roofline("pod1", "opt"))
     print("\nBaseline summary:\n" + summary())
     print("\nOptimized summary:\n" + summary("opt"))
+    print()
+    print(md_schedule_explain())
 
 
 if __name__ == "__main__":

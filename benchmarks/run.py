@@ -37,14 +37,15 @@ def collect_rows() -> list:
     """All benchmark rows as (name, value, note) tuples."""
     from benchmarks.paper_figs import ALL
     from benchmarks.bench_kernels import bench_kernels
-    from benchmarks.dse import (bench_search, bench_search_perf,
-                                bench_spatial)
+    from benchmarks.dse import (bench_obs, bench_search,
+                                bench_search_perf, bench_spatial)
 
     rows = []
     sections = dict(ALL)
     sections["search(DSE)"] = bench_search
     sections["search(spatial)"] = bench_spatial
     sections["search(perf)"] = bench_search_perf
+    sections["search(obs)"] = bench_obs
     for section, fn in sections.items():
         t0 = time.perf_counter()
         for name, value, note in fn():

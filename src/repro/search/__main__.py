@@ -23,6 +23,7 @@ import sys
 import time
 from pathlib import Path
 
+from repro import obs
 from repro.core.costmodel import HWSpec
 from repro.core.memory import apply_mem_overrides
 from repro.core.schedule import CONFIG_STACK, evaluate_stack
@@ -95,12 +96,34 @@ def main(argv=None) -> int:
                     help="process-pool fan-out for --dse/--dse-mem "
                          "sweeps (0 = serial with a shared sweep-wide "
                          "memo)")
+    ap.add_argument("--trace", type=Path, default=None, metavar="OUT.json",
+                    help="record a hierarchical span trace of the whole "
+                         "run and write it as Chrome-trace JSON (load "
+                         "in chrome://tracing or Perfetto); also "
+                         "prints the search.obs.* provenance counters")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the markdown schedule-explain report: "
+                         "per-layer mapping decisions, per-level "
+                         "traffic/energy breakdown, fusion groups (for "
+                         "sweeps: the EDP-best point's schedule)")
     args = ap.parse_args(argv)
     if args.cache_dir and (args.no_dedup or args.profile):
         ap.error("--cache-dir replays artifacts and bypasses the "
                  "search, so --no-dedup/--profile would be silently "
                  "meaningless there; drop one side")
+    if args.trace:
+        with obs.tracing() as tracer:
+            rc = _run(args, ap)
+        obs.write_chrome_trace(tracer, args.trace)
+        for name, value, note in obs.bench_rows(tracer):
+            print(f"{name},{value:.6g},{note}")
+        print(f"# wrote trace {args.trace} "
+              f"({tracer.span_count()} spans)")
+        return rc
+    return _run(args, ap)
 
+
+def _run(args: argparse.Namespace, ap: argparse.ArgumentParser) -> int:
     layers = get_workload(args.workload)
     hw = _build_hw(args)
     dedup = not args.no_dedup
@@ -158,6 +181,8 @@ def main(argv=None) -> int:
                   f"{int(p.label in on_front)}")
         print(f"# EDP-best: {best.label} (edp={best.edp:.4g}, "
               f"{best.edp/base_pt.edp:.4f}x the base spec)")
+        if args.explain:
+            print(obs.explain_schedule(layers, best.schedule))
         return 0
 
     if args.dse:
@@ -175,6 +200,8 @@ def main(argv=None) -> int:
             print(f"{p.label},{p.latency_s*1e3:.4g},{p.energy_j*1e3:.4g},"
                   f"{p.edp:.4g},{int(p.label in on_front)}")
         print(f"# EDP-best: {best.label} (edp={best.edp:.4g})")
+        if args.explain:
+            print(obs.explain_schedule(layers, best.schedule))
         if args.out:
             args.out.write_text(json.dumps({
                 "workload": args.workload,
@@ -227,6 +254,8 @@ def main(argv=None) -> int:
     names = [n for n, _ in CONFIG_STACK]
     for r, name in zip(evaluate_stack(layers, hw), names):
         print(f"hand.{name}.edp,{r.edp:.6g}")
+    if args.explain:
+        print(obs.explain_schedule(layers, sched, hw))
     if args.out:
         save_schedule(sched, args.out)
         print(f"# wrote {args.out}")

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from repro import obs
 from repro.core.costmodel import (HWSpec, NetworkCost,
                                   cost_network_scheduled,
                                   group_sram_overrides)
@@ -140,7 +141,28 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
     Pass a shared ``memo`` to reuse tables across the calls of a DSE
     sweep; pass ``perf`` (a ``search.perf.PerfRecorder``) to collect
     per-phase wall times and memo hit rates.
+
+    When an ``obs`` tracer is active (``obs.tracing()``, the CLI's
+    ``--trace``) the whole call nests under an ``auto`` span with the
+    per-phase spans and decision-provenance counters of the mapper /
+    partitioner / tiler / lowerer inside it; with no active tracer
+    every hook is a no-op and the schedule is bit-identical.
     """
+    with obs.span("auto", workload=workload, layers=len(layers),
+                  tile_mode=tile_mode, spatial_mode=spatial_mode,
+                  dedup=dedup):
+        return _auto_schedule(layers, hw, workload=workload,
+                              reconfigurable=reconfigurable,
+                              tile_mode=tile_mode,
+                              spatial_mode=spatial_mode, dedup=dedup,
+                              memo=memo, perf=perf)
+
+
+def _auto_schedule(layers: List[Layer], hw: Optional[HWSpec], *,
+                   workload: str, reconfigurable: bool, tile_mode: str,
+                   spatial_mode: str, dedup: bool,
+                   memo: Optional["SearchMemo"],
+                   perf: Optional[PerfRecorder]) -> Schedule:
     hw = hw or HWSpec()
     if not dedup and memo is not None:
         raise ValueError("dedup=False is the brute-force equivalence "
@@ -187,21 +209,22 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                                          tile_mode=tile_mode, memo=memo)
 
     # 3. tiles + group summaries
-    tiles: Dict[str, Dict[str, int]] = {}
-    group_names: List[Tuple[str, ...]] = []
-    for g in part.groups:
-        sl = layers[g.start:g.end]
-        group_names.append(tuple(l.name for l in sl))
-        macs = [l for l in sl if l.op in MAC_OPS]
-        if g.tile is not None and macs:
-            tiles[macs[0].name] = {
-                "tile_x": g.tile.tile_x, "tile_c": g.tile.tile_c,
-                "buffer_bytes": g.tile.buffer_bytes,
-                "weight_rereads": g.tile.weight_rereads,
-                "sram_traffic": g.tile.sram_traffic,
-                "ragged_x": g.tile.ragged_x,
-                "ragged_c": g.tile.ragged_c,
-                "level": g.tile.level}
+    with obs.span("tiles", groups=len(part.groups)):
+        tiles: Dict[str, Dict[str, int]] = {}
+        group_names: List[Tuple[str, ...]] = []
+        for g in part.groups:
+            sl = layers[g.start:g.end]
+            group_names.append(tuple(l.name for l in sl))
+            macs = [l for l in sl if l.op in MAC_OPS]
+            if g.tile is not None and macs:
+                tiles[macs[0].name] = {
+                    "tile_x": g.tile.tile_x, "tile_c": g.tile.tile_c,
+                    "buffer_bytes": g.tile.buffer_bytes,
+                    "weight_rereads": g.tile.weight_rereads,
+                    "sram_traffic": g.tile.sram_traffic,
+                    "ragged_x": g.tile.ragged_x,
+                    "ragged_c": g.tile.ragged_c,
+                    "level": g.tile.level}
 
     # 4. temporal orders (pixelwise-constrained where a channel-stat
     #    nonlinear fused into this layer's writeback) + per-operand
@@ -298,4 +321,6 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                       # mean spatial utilization over MAC layers — the
                       # number the factored mapspace exists to raise
                       "spatial_util": util_sum / util_n if util_n else 0.0}
+    obs.gauge("auto.spatial_util", sched.cost["spatial_util"])
+    obs.gauge("auto.edp", sched.cost["edp"])
     return sched

@@ -14,6 +14,7 @@ import json
 from pathlib import Path
 from typing import List, Optional
 
+from repro import obs
 from repro.core.costmodel import HWSpec
 from repro.core.workload import Layer
 
@@ -59,17 +60,19 @@ def save_schedule(schedule, path: Path) -> Path:
     return path
 
 
-def load_schedule(path: Path) -> Optional["object"]:
-    """Load a schedule artifact back.  Returns a Schedule, or None if the
-    file is unreadable / from a different search version."""
+def _load(path: Path):
+    """Load one artifact, reporting *why* a replay failed instead of
+    just None: returns ``(schedule, outcome)`` with outcome one of
+    "ok", "unreadable" (I/O or JSON error), "version" (stale search
+    version), "corrupt" (well-formed JSON that does not reconstruct)."""
     from repro.core.dataflow import as_mapping
     from repro.search.auto import Schedule
     try:
         raw = json.loads(Path(path).read_text())
     except (OSError, ValueError):
-        return None
+        return None, "unreadable"
     if raw.get("version") != SEARCH_VERSION:
-        return None
+        return None, "version"
     try:
         return Schedule(
             version=raw["version"], workload=raw["workload"],
@@ -85,12 +88,19 @@ def load_schedule(path: Path) -> Optional["object"]:
             tile_mode=raw.get("tile_mode", "full"),
             spatial_mode=raw.get("spatial_mode", "factored"),
             placements={k: dict(v) for k, v in
-                        raw.get("placements", {}).items()})
+                        raw.get("placements", {}).items()}), "ok"
     except (KeyError, TypeError, ValueError):
         # ValueError: a corrupt mapping value (malformed factored axis /
         # non-numeric factor) surfaced by as_mapping — same contract as
         # any other unreadable artifact: None, caller re-searches
-        return None
+        return None, "corrupt"
+
+
+def load_schedule(path: Path) -> Optional["object"]:
+    """Load a schedule artifact back.  Returns a Schedule, or None if the
+    file is unreadable / from a different search version (use ``_load``
+    / ``cached_search`` when the failure reason matters)."""
+    return _load(path)[0]
 
 
 def _remap_layer_names(sched, layers: List[Layer]):
@@ -136,24 +146,60 @@ def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                   workload: str = "custom",
                   cache_dir: Optional[Path] = None,
                   refresh: bool = False,
+                  tile_mode: str = "full",
                   spatial_mode: str = "factored"):
     """Run (or replay) the auto-scheduler through the artifact cache.
     Replayed artifacts are name-remapped onto the request's layers (the
-    content-hashed key is rename-stable by design)."""
+    content-hashed key is rename-stable by design).  ``tile_mode`` and
+    ``spatial_mode`` are search dimensions and thread into both the key
+    and the search, so an ablation-mode request never replays (or
+    stores) a full-enumeration artifact.
+
+    Every replay outcome is reported through ``repro.obs`` (no-ops when
+    no tracer is active) as ``cache.*`` counters + ``cache.replay``
+    events: ``hit`` (plus ``rename_remap`` when the artifact needed
+    positional renaming), ``version_reject`` (stale SEARCH_VERSION),
+    ``corrupt`` (unreadable / non-reconstructing / key-mismatched /
+    non-tiling artifact), and ``miss`` -> ``store`` when the search
+    runs — instead of silently falling back to a re-search."""
     from repro.search.auto import auto_schedule
     hw = hw or HWSpec()
     if cache_dir is None:
         return auto_schedule(layers, hw, workload=workload,
+                             tile_mode=tile_mode,
                              spatial_mode=spatial_mode)
-    key = schedule_key(layers, hw, spatial_mode=spatial_mode)
+    key = schedule_key(layers, hw, tile_mode=tile_mode,
+                       spatial_mode=spatial_mode)
     path = Path(cache_dir) / f"{workload}-{key}.json"
     if not refresh and path.exists():
-        sched = load_schedule(path)
-        if sched is not None and sched.key == key:
-            sched = _remap_layer_names(sched, layers)
-            if sched is not None:
-                return sched
+        sched, why = _load(path)
+        if sched is not None and sched.key != key:
+            # filename/key disagreement inside the artifact body
+            sched, why = None, "corrupt"
+        if sched is not None:
+            remapped = _remap_layer_names(sched, layers)
+            if remapped is None:
+                why = "corrupt"    # names do not tile the chain
+            else:
+                renamed = remapped is not sched
+                if renamed:
+                    obs.count("cache.rename_remap")
+                obs.count("cache.hit")
+                obs.event("cache.replay", outcome="hit",
+                          workload=workload, key=key, path=str(path),
+                          renamed=renamed)
+                return remapped
+        if why == "version":
+            obs.count("cache.version_reject")
+        else:                      # "unreadable" | "corrupt"
+            obs.count("cache.corrupt")
+        obs.event("cache.replay", outcome=why, workload=workload,
+                  key=key, path=str(path))
+    obs.count("cache.miss")
+    obs.event("cache.replay", outcome="miss", workload=workload, key=key,
+              refresh=refresh)
     sched = auto_schedule(layers, hw, workload=workload,
-                          spatial_mode=spatial_mode)
+                          tile_mode=tile_mode, spatial_mode=spatial_mode)
     save_schedule(sched, path)
+    obs.count("cache.store")
     return sched

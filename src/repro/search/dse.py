@@ -33,6 +33,7 @@ import dataclasses
 import itertools
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.core.costmodel import HWSpec
 from repro.core.workload import Layer
 from repro.search.auto import Schedule, auto_schedule
@@ -105,14 +106,25 @@ def _point(hw: HWSpec, sched: Schedule,
 def _schedule_variant(args):
     """Process-pool worker: one variant, own memo + own recorder
     (module-level so it pickles under the spawn start method too).
-    Returns ``(schedule, phase_s, counters)`` — the recorder's raw
-    tables ride back over the pickle boundary so the caller can merge
-    them instead of losing the workers' profile."""
-    layers, hw, workload, dedup, spatial_mode = args
+    Returns ``(schedule, phase_s, counters, span_tables)`` — the
+    recorder's raw tables ride back over the pickle boundary so the
+    caller can merge them instead of losing the workers' profile.
+    ``span_tables`` is the worker tracer's ``to_tables()`` snapshot
+    when the caller had an active tracer (a ``Tracer`` itself is not
+    picklable — it holds a lock), else None."""
+    layers, hw, workload, dedup, spatial_mode, trace = args
     wperf = PerfRecorder()
-    sched = auto_schedule(layers, hw, workload=workload, dedup=dedup,
-                          spatial_mode=spatial_mode, perf=wperf)
-    return sched, wperf.phase_s, wperf.counters
+    if trace:
+        with obs.tracing() as tracer:
+            sched = auto_schedule(layers, hw, workload=workload,
+                                  dedup=dedup, spatial_mode=spatial_mode,
+                                  perf=wperf)
+        tables = tracer.to_tables()
+    else:
+        sched = auto_schedule(layers, hw, workload=workload, dedup=dedup,
+                              spatial_mode=spatial_mode, perf=wperf)
+        tables = None
+    return sched, wperf.phase_s, wperf.counters, tables
 
 
 def _schedule_variants(layers: List[Layer], variants: Sequence[HWSpec],
@@ -128,27 +140,46 @@ def _schedule_variants(layers: List[Layer], variants: Sequence[HWSpec],
     ``perf`` merges them, so ``--profile --jobs N`` reports real phase
     times and memo counters (a caller-supplied memo still cannot cross
     process boundaries — passing one with ``parallel`` stays an error
-    rather than a silent drop)."""
-    if parallel > 1:
-        if memo is not None:
-            raise ValueError("parallel sweeps cannot share a caller-"
-                             "supplied memo across processes; drop "
-                             "memo= or run serially")
-        from concurrent.futures import ProcessPoolExecutor
-        with ProcessPoolExecutor(max_workers=parallel) as ex:
-            results = list(ex.map(
-                _schedule_variant,
-                [(layers, hw, workload, dedup, spatial_mode)
-                 for hw in variants]))
-        if perf is not None:
-            for _, phase_s, counters in results:
-                perf.merge(phase_s, counters)
-        return [sched for sched, _, _ in results]
-    if memo is None and dedup:
-        memo = SearchMemo(perf=perf)
-    return [auto_schedule(layers, hw, workload=workload, dedup=dedup,
-                          spatial_mode=spatial_mode, memo=memo, perf=perf)
-            for hw in variants]
+    rather than a silent drop).  Under an active ``obs`` tracer the
+    whole sweep is one ``dse`` span; parallel workers additionally ship
+    their span trees back (``Tracer.to_tables``) and the caller rebases
+    them onto its own clock under the ``dse`` span, one track per
+    worker — the span-tree analogue of ``PerfRecorder.merge``."""
+    with obs.span("dse", variants=len(variants), parallel=parallel,
+                  workload=workload, dedup=dedup):
+        if parallel > 1:
+            if memo is not None:
+                raise ValueError("parallel sweeps cannot share a caller-"
+                                 "supplied memo across processes; drop "
+                                 "memo= or run serially")
+            from concurrent.futures import ProcessPoolExecutor
+            act = obs.current()
+            base = act.now() if act is not None else 0.0
+            with ProcessPoolExecutor(max_workers=parallel) as ex:
+                results = list(ex.map(
+                    _schedule_variant,
+                    [(layers, hw, workload, dedup, spatial_mode,
+                      act is not None)
+                     for hw in variants]))
+            if perf is not None:
+                for _, phase_s, counters, _ in results:
+                    perf.merge(phase_s, counters)
+            if act is not None:
+                # rebase each worker's relative timestamps to the pool
+                # launch time on the caller's clock; wall time inside a
+                # worker stays exact, cross-worker alignment is bounded
+                # by pool startup skew
+                for wi, (_, _, _, tables) in enumerate(results):
+                    if tables is not None:
+                        act.merge_tables(tables, offset=base,
+                                         label=f"worker{wi}")
+            return [sched for sched, _, _, _ in results]
+        if memo is None and dedup:
+            memo = SearchMemo(perf=perf)
+        return [auto_schedule(layers, hw, workload=workload, dedup=dedup,
+                              spatial_mode=spatial_mode, memo=memo,
+                              perf=perf)
+                for hw in variants]
 
 
 def sweep(layers: List[Layer], variants: Optional[Iterable[HWSpec]] = None,

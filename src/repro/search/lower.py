@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.core.workload import (MAC_OPS, MATMUL, NORM, PWCONV, SOFTMAX,
                                  Layer)
 from repro.search import tiler
@@ -151,6 +152,7 @@ def lower_schedule(layers: Sequence[Layer], groups, tiles: Dict[str, dict],
     buffer, not the innermost RF.
     """
     out: List[LoweredKernel] = []
+    groups = list(groups)
     for g in groups:
         sl = layers[g.start:g.end]
         macs = [l for l in sl if l.op in MAC_OPS]
@@ -186,4 +188,14 @@ def lower_schedule(layers: Sequence[Layer], groups, tiles: Dict[str, dict],
             if mac.op == MATMUL and sm is not None:
                 out.append(lower_attention(mac, tile_x=tx, seq=sm.c))
                 continue
+    # decision provenance: kernels emitted by type + groups with no
+    # lowerable construct (each group lowers to at most one kernel)
+    kinds: Dict[str, int] = {}
+    for lk in out:
+        kinds[lk.kernel] = kinds.get(lk.kernel, 0) + 1
+    for kind, c in kinds.items():
+        obs.count(f"lower.kernel.{kind}", c)
+    unlowered = len(groups) - len(out)
+    if unlowered > 0:
+        obs.count("lower.groups_unlowered", unlowered)
     return out

@@ -39,6 +39,7 @@ import dataclasses
 import itertools
 from typing import Dict, Iterator, List, Optional, Tuple
 
+from repro import obs
 from repro.core import dataflow
 from repro.core.costmodel import HWSpec
 from repro.core.tiling import Tiling, tile_candidates
@@ -157,7 +158,10 @@ def _best_factored(layer: Layer, rows: int, cols: int,
     floor_cyc = -(-total // (rows * cols))
     best_cyc = incumbent.cycles
     if best_cyc <= floor_cyc:
-        return incumbent                # the pair space is already optimal
+        # the pair space is already optimal: the whole factored scan is
+        # dominance-pruned (provenance counter, no-op untraced)
+        obs.count("mapper.spatial.floor_skipped")
+        return incumbent
     idx = {d: i for i, d in enumerate(dims)}
     # column options pre-resolved to (axis, [(dim index, factor)],
     # reduction dims) so the hot loop runs on ints
@@ -181,13 +185,16 @@ def _best_factored(layer: Layer, rows: int, cols: int,
                          [d for d, _ in ra if d in red]))
     rows_pre.sort(key=lambda t: t[0])
     best_fm: Optional[Tuple] = None
+    n_rows = n_eval = 0
     for partial, ra, rem, r_red in rows_pre:
         if -(-partial // cols) > best_cyc:
             break
+        n_rows += 1
         for ca, cf, c_red in cols_pre:
             # a reduction dim never splits across both axes
             if r_red and c_red and any(d in r_red for d in c_red):
                 continue
+            n_eval += 1
             cyc = partial
             for i, f in cf:
                 r = rem[i]
@@ -198,6 +205,12 @@ def _best_factored(layer: Layer, rows: int, cols: int,
                 best_fm = (ra, ca)
         if best_cyc <= floor_cyc:
             break                       # nothing can rank lower
+    # decision provenance: factored candidates costed vs whole row
+    # assignments dominance-pruned by the ceil(partial / cols) bound
+    obs.count("mapper.spatial.factored_evaluated", n_eval)
+    pruned_rows = len(rows_pre) - n_rows
+    if pruned_rows:
+        obs.count("mapper.spatial.factored_rows_pruned", pruned_rows)
     if best_fm is None:
         return incumbent
     return MappingChoice(best_fm, best_cyc,
@@ -234,7 +247,9 @@ def best_mapping(layer: Layer, rows: int = 16, cols: int = 16, *,
                                  fixed_wiring=fixed_wiring,
                                  spatial_mode=spatial_mode))
     best: Optional[MappingChoice] = None
+    n_pairs = 0
     for m in enumerate_mappings(layer):
+        n_pairs += 1
         cyc = dataflow.cycles_generic(layer, m, rows, cols,
                                       fixed_wiring=fixed_wiring)
         if best is None or (cyc, m) < (best.cycles, best.mapping):
@@ -243,6 +258,14 @@ def best_mapping(layer: Layer, rows: int = 16, cols: int = 16, *,
     assert best is not None
     if spatial_mode == "factored" and not fixed_wiring:
         best = _best_factored(layer, rows, cols, best)
+    obs.count("mapper.spatial.pairs_enumerated", n_pairs)
+    if obs.current() is not None:
+        # one provenance event per *computed* layer mapping (memo hits
+        # replay the decision without re-emitting it)
+        obs.event("mapper.spatial", layer=layer.name,
+                  mapping=dataflow.mapping_label(best.mapping),
+                  cycles=best.cycles, pairs_enumerated=n_pairs,
+                  utilization=round(best.utilization, 4))
     return best
 
 
@@ -611,6 +634,7 @@ def _best_temporal_fast(layer: Layer, hw: HWSpec,
 
     best_key = None        # (energy, order, tile_x) — the brute rank key
     best_pick = None       # the winning resolved row
+    n_pruned = n_eval = 0
     for row in rows:
         (tx, _tk, _tc, rx, rk, rc, _ti, _tw, _to,
          w0, w1, i0, i1, o0, o1, _st, fills) = row
@@ -632,7 +656,9 @@ def _best_temporal_fast(layer: Layer, hw: HWSpec,
             if o0:
                 lb += o0 * pj_o
             if lb > best_key[0]:
+                n_pruned += 1
                 continue
+        n_eval += 1
         # per-operand streamed bytes depend on the inner loop only
         # (``_traffic``, precomputed in the table rows); energies
         # accumulate in the same weight, input, output order as
@@ -671,6 +697,11 @@ def _best_temporal_fast(layer: Layer, hw: HWSpec,
             best_key = key3
             best_pick = row
 
+    # decision provenance: tiles costed through the order loop vs tiles
+    # dominance-pruned by the all-resident energy lower bound
+    obs.count("mapper.temporal.tiles_evaluated", n_eval)
+    if n_pruned:
+        obs.count("mapper.temporal.tiles_pruned", n_pruned)
     if best_key is None:
         return None
     # materialize the winning TemporalChoice exactly as the brute path

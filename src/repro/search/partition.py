@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.core.costmodel import HWSpec
 from repro.core.fusion import SpillEdge
 from repro.core.workload import MAC_OPS, NORM, SOFTMAX, Layer
@@ -268,9 +269,26 @@ def partition_chain(layers: Sequence[Layer],
     else:
         budgets = ((hw.hierarchy.innermost.name, local_buffer,
                     hw.e_rf_byte),)
-    if memo is None:
-        return _partition_brute(layers, cycles_by_name, hw, act_budget,
-                                budgets, max_span, tile_mode)
+    with obs.span("fusion", layers=len(layers), max_span=max_span,
+                  budgets=[n for n, _, _ in budgets]):
+        if memo is None:
+            return _partition_brute(layers, cycles_by_name, hw,
+                                    act_budget, budgets, max_span,
+                                    tile_mode)
+        return _partition_fast(layers, cycles_by_name, hw, act_budget,
+                               budgets, max_span, tile_mode, memo)
+
+
+def _partition_fast(layers: Sequence[Layer],
+                    cycles_by_name: Dict[str, int], hw: HWSpec,
+                    act_budget: int,
+                    budgets: Sequence[tiler.LevelBudget],
+                    max_span: int, tile_mode: str, memo) -> Partition:
+    """The memoized probe loop (see ``partition_chain``).  When a tracer
+    is active it additionally tracks, per DP node, the runner-up
+    segmentation total — the backtrace then emits one ``fusion.cut``
+    event per chosen group carrying the energy margin that justified
+    the boundary and the spilled bytes it pays."""
     spill_pj = hw.hierarchy.outermost.pj_per_byte
     n = len(layers)
     # -- span-invariant terms, hoisted out of the O(n * max_span) DP
@@ -340,11 +358,18 @@ def partition_chain(layers: Sequence[Layer],
     # for the winning chain after the backtrace
     choice: List[Optional[Tuple[int, Optional[tiler.GroupTile]]]] = \
         [None] * (n + 1)
+    # decision provenance (captured once; the per-probe cost is one
+    # bool check when untraced, so the --profile speedup is unaffected)
+    trace = obs.current() is not None
+    best2: List[float] = [INF] * (n + 1)   # runner-up total per node
+    n_probed = n_chain_break = n_no_tile = 0
+    tile_rej: Dict[str, int] = {}
 
     for i in range(1, n + 1):
         for j in range(max(0, i - max_span), i):
             if dp[j] == INF:
                 continue
+            n_probed += 1
             m = nmac[i] - nmac[j]
             fm = first_mac[j]
             tile: Optional[tiler.GroupTile] = None
@@ -358,6 +383,7 @@ def partition_chain(layers: Sequence[Layer],
                     pj += nl_pj[idx]
             if m > 1:
                 if chain_end[fm] < last_mac[i]:
+                    n_chain_break += 1
                     continue           # chain breaks inside the span
                 sl = layers[j:i]
                 # per-budget tile search through the group_tile memo
@@ -379,6 +405,8 @@ def partition_chain(layers: Sequence[Layer],
                     else:
                         g_hits += 1
                     if t is None:
+                        # tile candidate rejected by this budget level
+                        tile_rej[nm] = tile_rej.get(nm, 0) + 1
                         continue
                     t_pj = t.sram_traffic * stream_pj \
                         + 2 * interior * level_pj
@@ -387,6 +415,7 @@ def partition_chain(layers: Sequence[Layer],
                             replace(t, level=nm)
                         tile_pj = t_pj
                 if tile is None:
+                    n_no_tile += 1
                     continue           # no tile fits any budget
                 # depth-first group: spill-level traffic comes from the
                 # tiler (input re-reads per channel round + weight
@@ -405,13 +434,25 @@ def partition_chain(layers: Sequence[Layer],
                 nbytes = out_bytes[j - 1]
                 if nbytes > act_budget:
                     pj += 2 * nbytes * spill_pj
-            if dp[j] + pj < dp[i]:
-                dp[i] = dp[j] + pj
+            total = dp[j] + pj
+            if total < dp[i]:
+                if trace:
+                    best2[i] = dp[i]   # incumbent demoted to runner-up
+                dp[i] = total
                 choice[i] = (j, tile)
+            elif trace and total < best2[i]:
+                best2[i] = total
     if g_hits:
         memo.perf.count("memo.group_tile.hit", g_hits)
     if g_miss:
         memo.perf.count("memo.group_tile.miss", g_miss)
+    obs.count("fusion.spans_probed", n_probed)
+    if n_chain_break:
+        obs.count("fusion.spans_chain_infeasible", n_chain_break)
+    if n_no_tile:
+        obs.count("fusion.spans_no_tile", n_no_tile)
+    for nm, c in tile_rej.items():
+        obs.count(f"tiler.reject.{nm}", c)
 
     assert dp[n] < INF, "no feasible partition (single layers are always" \
                         " feasible — this indicates a bug)"
@@ -428,4 +469,17 @@ def partition_chain(layers: Sequence[Layer],
         e = _boundary_edge(layers, groups, gi, act_budget)
         if e is not None:
             edges.append(e)
+    if trace:
+        obs.count("fusion.groups", len(groups))
+        for g in groups:
+            spill = 0
+            if g.start > 0 and out_bytes[g.start - 1] > act_budget:
+                spill = out_bytes[g.start - 1]
+            margin = best2[g.end] - dp[g.end] \
+                if best2[g.end] < INF else None
+            obs.event("fusion.cut", start=g.start, end=g.end,
+                      layers=g.end - g.start,
+                      head=layers[g.start].name,
+                      level=g.tile.level if g.tile else None,
+                      margin_pj=margin, boundary_spill_bytes=spill)
     return Partition(groups=groups, edges=edges, cost_pj=dp[n])

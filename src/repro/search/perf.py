@@ -9,6 +9,17 @@ benchmarks (``benchmarks/dse.py``) and the ``--profile`` CLI flag turn
 one recorder into ``search.perf.*`` rows, so scheduler speed is tracked
 in the BENCH trajectory exactly like the schedules it produces.
 
+Since the ``repro.obs`` tracer landed, a recorder is a *compatibility
+view* over an ``obs.Tracer``: ``phase_s`` and ``counters`` are the
+tracer's own tables (one private tracer per recorder by default, or
+pass ``tracer=`` to share), and every ``phase`` additionally opens an
+*ambient* span via ``repro.obs`` — so when a tracer is active
+(``obs.tracing()``, the CLI's ``--trace``) the phases appear nested
+under the enclosing ``auto``/``dse`` spans in the Chrome trace, while
+the ``search.perf.*`` rows stay bit-identical to the pre-tracer
+surface (same float accumulation order, same row set — pinned by
+``tests/test_search_perf.py``).
+
 Nothing here is load-bearing for search results: with no recorder the
 fast path runs uninstrumented (``phase`` degrades to a no-op), and the
 counters never feed back into any decision.
@@ -17,39 +28,59 @@ from __future__ import annotations
 
 import contextlib
 import time
-from typing import Dict, Iterator, List, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro import obs
+from repro.obs.tracer import Tracer
 
 Row = Tuple[str, float, str]
 
 
 class PerfRecorder:
     """Per-phase wall time + memo hit/miss counters for one search run
-    (or one DSE sweep — times and counts accumulate across calls)."""
+    (or one DSE sweep — times and counts accumulate across calls).
+    A thin view over an ``obs.Tracer``: the tracer owns the tables."""
 
-    def __init__(self) -> None:
-        self.phase_s: Dict[str, float] = {}
-        self.counters: Dict[str, int] = {}
+    def __init__(self, tracer: Optional[Tracer] = None) -> None:
+        self.tracer = tracer if tracer is not None else Tracer()
+
+    @property
+    def phase_s(self) -> Dict[str, float]:
+        return self.tracer.phase_s
+
+    @property
+    def counters(self) -> Dict[str, int]:
+        return self.tracer.counters
 
     @contextlib.contextmanager
     def phase(self, name: str) -> Iterator[None]:
-        t0 = time.perf_counter()
-        try:
-            yield
-        finally:
-            self.phase_s[name] = self.phase_s.get(name, 0.0) \
-                + time.perf_counter() - t0
+        # the ambient span (a no-op when no tracer is active) nests the
+        # phase under whatever span encloses this call; the wall-time
+        # accumulation below is the legacy surface and keeps its exact
+        # float-add order so ``search.perf.*`` rows stay bit-identical
+        with obs.span(name):
+            t0 = time.perf_counter()
+            try:
+                yield
+            finally:
+                ph = self.tracer.phase_s
+                ph[name] = ph.get(name, 0.0) + time.perf_counter() - t0
 
     def count(self, key: str, n: int = 1) -> None:
-        self.counters[key] = self.counters.get(key, 0) + n
+        c = self.tracer.counters
+        c[key] = c.get(key, 0) + n
 
     def merge(self, phase_s: Dict[str, float],
               counters: Dict[str, int]) -> None:
         """Fold another recorder's raw tables into this one — how a
         parallel sweep's per-worker recorders (serialized back as plain
         dicts across the process boundary) accumulate into the caller's
-        recorder instead of being dropped."""
+        recorder instead of being dropped.  The workers' span *trees*
+        travel separately (``obs.Tracer.to_tables`` /
+        ``merge_tables``); this merge is the flat-table half."""
+        ph = self.tracer.phase_s
         for k, v in phase_s.items():
-            self.phase_s[k] = self.phase_s.get(k, 0.0) + v
+            ph[k] = ph.get(k, 0.0) + v
         for k, v in counters.items():
             self.count(k, v)
 

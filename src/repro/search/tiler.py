@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
+from repro import obs
 from repro.core import fusion
 from repro.core.fusion import FusedTile
 from repro.core.tiling import budget_tile_candidates
@@ -226,6 +227,10 @@ def tile_group(group: Sequence[Layer], *,
     for name, capacity, level_pj in budgets:
         t = _tile_group_at(group, capacity, mode)
         if t is None:
+            # no candidate fits this budget level (provenance counter,
+            # no-op untraced; the partitioner's memoized probe loop
+            # counts its own rejections the same way)
+            obs.count(f"tiler.reject.{name}")
             continue
         pj = t.sram_traffic * stream_pj + 2 * interior * level_pj
         if best is None or pj < best_pj:
