@@ -39,6 +39,7 @@ def collect_rows() -> list:
     from benchmarks.bench_kernels import bench_kernels
     from benchmarks.dse import (bench_obs, bench_search,
                                 bench_search_perf, bench_spatial)
+    from benchmarks.serve import bench_serve
 
     rows = []
     sections = dict(ALL)
@@ -46,6 +47,7 @@ def collect_rows() -> list:
     sections["search(spatial)"] = bench_spatial
     sections["search(perf)"] = bench_search_perf
     sections["search(obs)"] = bench_obs
+    sections["search(serve)"] = bench_serve
     for section, fn in sections.items():
         t0 = time.perf_counter()
         for name, value, note in fn():

@@ -1,0 +1,135 @@
+"""Benchmark section for the serving layer: ``search.serve.*``.
+
+Four claims pinned into the BENCH trajectory:
+
+  * warm-store hit latency — a served lookup against the pre-warmed
+    ``ServeStore`` is a memory probe, reported against the cold
+    ``auto_schedule`` wall time on the same request
+    (``hit_speedup_vs_cold``, target >= 100x); the disk-replay tier
+    (fresh process, artifact parse + remap) is reported alongside;
+  * request throughput under key churn — round-robin lookups over the
+    whole warmed (workload x batch) grid, so every request switches
+    keys (the worst case for any single-entry caching);
+  * the latency-vs-batch curve — each co-searched batch level carries
+    its own searched schedule; modeled service latency per level for
+    the serving workloads at batch {1, 4, 16, 64};
+  * policy non-degeneracy — the arrival-rate policy's batch pick at
+    each swept rate, with ``distinct_batches`` >= 2 over the rates
+    (batching must actually engage, not collapse to one level).
+
+Counter outcomes (hit vs miss) are asserted here — they are logical
+facts; the wall-clock ratios are reported as rows only (ROADMAP: noisy
+CI boxes flake wall-time asserts).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+from typing import List, Tuple
+
+from repro import obs
+from repro.core.costmodel import HWSpec
+from repro.search import auto_schedule, get_workload
+from repro.serve import ServeStore, co_search, distinct_batches, rate_table
+
+Row = Tuple[str, float, str]
+
+# three serving workloads spanning the conv-heavy / attention-heavy /
+# reparameterized corners of the hybrid-ViT registry
+_ARCHES = ("edgenext-s", "vit-tiny", "fastvit-s")
+_BATCHES = (1, 4, 16, 64)
+_RATES = (2.0, 15.0, 60.0)
+_DEVICES = 4
+_HIT_REPS = 5
+
+
+def bench_serve() -> List[Row]:
+    rows: List[Row] = []
+    hw = HWSpec()
+    tmp = Path(tempfile.mkdtemp(prefix="bench-serve-"))
+    try:
+        store = ServeStore(tmp, hw)
+
+        # cold baseline: the full DP on the flagship serving request
+        wl = get_workload("edgenext-s-b4")
+        auto_schedule(wl, hw, workload="edgenext-s-b4")     # warmup
+        t_cold = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            auto_schedule(wl, hw, workload="edgenext-s-b4")
+            t_cold = min(t_cold, time.perf_counter() - t0)
+        rows.append(("search.serve.cold_ms", t_cold * 1e3,
+                     "full auto_schedule on edgenext-s-b4"))
+
+        t0 = time.perf_counter()
+        with obs.tracing() as tr:
+            rep = store.warm(_ARCHES, batches=_BATCHES)
+        rows.append(("search.serve.warm.entries", len(rep.entries),
+                     f"{rep.searched} cold-searched, "
+                     f"store={tr.counters.get('cache.store', 0)}"))
+        rows.append(("search.serve.warm.wall_ms",
+                     (time.perf_counter() - t0) * 1e3,
+                     f"{len(_ARCHES)} workloads x batch {list(_BATCHES)}"))
+
+        # warm-store hit: a memory probe, never the DP (counters prove it)
+        with obs.tracing() as tr:
+            t_hit = float("inf")
+            for _ in range(_HIT_REPS):
+                t0 = time.perf_counter()
+                store.lookup("edgenext-s", 4)
+                t_hit = min(t_hit, time.perf_counter() - t0)
+        assert tr.counters.get("cache.hit", 0) == _HIT_REPS \
+            and not tr.counters.get("cache.miss", 0), tr.counters
+        rows.append(("search.serve.hit_latency_ms", t_hit * 1e3,
+                     f"memory tier, best of {_HIT_REPS}; "
+                     f"cache.hit={_HIT_REPS} cache.miss=0"))
+        rows.append(("search.serve.hit_speedup_vs_cold", t_cold / t_hit,
+                     "target >= 100x (warm store vs full DP)"))
+
+        # disk tier: a fresh store (new process analogue) replays the
+        # artifact — JSON parse + reconstruct, still no DP
+        fresh = ServeStore(tmp, hw)
+        with obs.tracing() as tr:
+            t0 = time.perf_counter()
+            fresh.lookup("edgenext-s", 4)
+            t_disk = time.perf_counter() - t0
+        assert tr.counters.get("cache.hit", 0) == 1 \
+            and not tr.counters.get("cache.miss", 0), tr.counters
+        rows.append(("search.serve.disk_hit_ms", t_disk * 1e3,
+                     "artifact replay in a cold process, no DP"))
+
+        # sustained request rate with every request switching keys
+        reqs = [(a, b) for a in _ARCHES for b in _BATCHES] * 8
+        t0 = time.perf_counter()
+        for a, b in reqs:
+            store.lookup(a, b)
+        dt = time.perf_counter() - t0
+        rows.append(("search.serve.requests_per_s", len(reqs) / dt,
+                     f"{len(reqs)} round-robin lookups over "
+                     f"{len(rep.keys)} keys"))
+
+        # latency-vs-batch curves + the arrival-rate policy's picks
+        for arch in _ARCHES:
+            key = arch.replace("-", "_")
+            pts = co_search(store, arch, batches=_BATCHES)
+            for p in pts:
+                rows.append((f"search.serve.batch.{key}.b{p.batch}"
+                             f".latency_ms", p.latency_s * 1e3,
+                             f"{p.throughput_rps:.1f} rps back-to-back"))
+            picks = rate_table(pts, _RATES, devices=_DEVICES)
+            for pk in picks:
+                rows.append((f"search.serve.policy.{key}"
+                             f".rate{pk.rate_rps:g}.batch", pk.point.batch,
+                             f"exp_latency={pk.expected_latency_s*1e3:.1f}"
+                             f"ms shards={pk.devices}x"
+                             f"b{pk.shard_point.batch}"
+                             f"{' SATURATED' if pk.saturated else ''}"))
+            rows.append((f"search.serve.policy.{key}.distinct_batches",
+                         distinct_batches(picks),
+                         f">=2: batching engages over rates "
+                         f"{list(_RATES)}, {_DEVICES}-device mesh"))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows

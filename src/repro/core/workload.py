@@ -198,6 +198,23 @@ def edgenext_workload(cfg: EdgeNeXtConfig, batch: int = 1) -> List[Layer]:
     return layers
 
 
+def with_batch(layers: List[Layer], batch: int) -> List[Layer]:
+    """Re-shape a layer chain to a serving batch: every layer's batch
+    loop-dim scales by ``batch`` (attention layers already folding
+    heads / patches into ``b`` scale the same way, which is exactly how
+    the ``*_workload(batch=...)`` builders construct their batched
+    chains — ``with_batch(wl(batch=1), b) == wl(batch=b)`` layer for
+    layer, names included).  Batch is thereby a first-class mapspace
+    dim: the transformed chain has new content signatures, so the
+    schedule cache / serve store co-search and key each batch level
+    independently."""
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if batch == 1:
+        return list(layers)
+    return [dataclasses.replace(l, b=l.b * batch) for l in layers]
+
+
 def edgenext_serving_workload(batch: int = 4,
                               cfg: Optional[EdgeNeXtConfig] = None
                               ) -> List[Layer]:

@@ -73,11 +73,13 @@ def main() -> None:
     for _ in range(args.gen):
         tok1, logits, cache = jit_decode(params, cache, {"tokens": tok})
         tok = tok1[:, None]
-        outputs.append(np.asarray(tok1))
-    jax.block_until_ready(logits)
+        # keep device arrays in the timed loop: np.asarray here would
+        # force a host sync per token and inflate ms/tok
+        outputs.append(tok1)
+    jax.block_until_ready(outputs)
     t_decode = time.monotonic() - t0
 
-    gen = np.stack(outputs, axis=1)
+    gen = np.stack([np.asarray(o) for o in outputs], axis=1)
     print(f"arch={cfg.name} prefill[{B}x{S}]={t_prefill*1e3:.0f}ms "
           f"decode {args.gen} steps={t_decode*1e3:.0f}ms "
           f"({t_decode/args.gen*1e3:.1f} ms/tok)")

@@ -101,6 +101,41 @@ def gpipe(
         out_specs=o_spec)(stage_params, x_micro)
 
 
+def data_parallel(
+    fn: Callable[[Pytree, Pytree], Pytree],
+    *,
+    mesh: Mesh,
+    axis: str = "data",
+) -> Callable[[Pytree, Pytree], Pytree]:
+    """Data-parallel fan-out of a batched function over one mesh axis.
+
+    fn(params, x) -> y, with every leaf of ``x`` and ``y`` batched on
+    dim 0.  Params are replicated; the batch dim is sharded over
+    ``axis``, so each device runs fn on its own B/devices shard — the
+    serving policy's fan-out primitive (``serve.policy`` serves a
+    batch-b arrival group as ``devices`` shards of the co-searched
+    batch-b/devices schedule, and this is the launcher that does it).
+
+    The global batch must divide the axis size; serving always has that
+    by construction (the policy only fans out when it does).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes[axis]
+
+    from repro.runtime.sharding import shard_map
+    sharded = shard_map(fn, mesh=mesh,
+                        in_specs=(P(), P(axis)), out_specs=P(axis))
+
+    def wrapped(params: Pytree, x: Pytree) -> Pytree:
+        B = jax.tree.leaves(x)[0].shape[0]
+        if B % n != 0:
+            raise ValueError(
+                f"batch {B} not divisible by {axis}={n} shards")
+        return sharded(params, x)
+
+    return wrapped
+
+
 def microbatch(x: jax.Array, n_micro: int) -> jax.Array:
     """[B, ...] -> [M, B/M, ...]."""
     B = x.shape[0]

@@ -32,35 +32,53 @@ __all__ = [
     "Schedule", "auto_schedule", "evaluate_schedule", "cached_search",
     "load_schedule", "save_schedule", "schedule_key", "DsePoint",
     "edp_best", "hw_variants", "memory_variants", "pareto_front", "sweep",
-    "sweep_memory", "WORKLOADS", "get_workload",
+    "sweep_memory", "WORKLOADS", "get_workload", "parse_workload",
 ]
 
 
 def get_workload(name: str):
-    """Named workload registry for the CLI / benchmarks."""
+    """Named workload registry for the CLI / benchmarks / serve store.
+
+    A ``-b<N>`` suffix on any registered base name is the batch-``N``
+    serving shape (``core.workload.with_batch``): the historical
+    ``edgenext-s-b4`` / ``mobilevit-s-b4`` / ``fastvit-s-b4`` entries
+    are the ``N=4`` points of this family, and any other batch level
+    (``vit-tiny-b16``, ``edgenext-s-b64``, ...) resolves the same way —
+    the serve layer co-searches batch ∈ {1, 4, 16, 64} through exactly
+    this naming."""
     from repro.configs.edgenext_s import CONFIG, reduced_edgenext
-    from repro.core.workload import (edgenext_serving_workload,
-                                     edgenext_workload,
+    from repro.core.workload import (edgenext_workload,
                                      efficientvit_workload,
-                                     fastvit_serving_workload,
-                                     fastvit_workload,
-                                     mobilevit_serving_workload,
-                                     mobilevit_workload, vit_workload)
+                                     fastvit_workload, mobilevit_workload,
+                                     vit_workload, with_batch)
     builders = {
         "edgenext-s": lambda: edgenext_workload(CONFIG),
-        "edgenext-s-b4": lambda: edgenext_serving_workload(batch=4),
         "edgenext-reduced": lambda: edgenext_workload(reduced_edgenext()),
         "vit-tiny": lambda: vit_workload(),
         "efficientvit-b0": lambda: efficientvit_workload(),
         "mobilevit-s": lambda: mobilevit_workload(),
-        "mobilevit-s-b4": lambda: mobilevit_serving_workload(batch=4),
         "fastvit-s": lambda: fastvit_workload(),
-        "fastvit-s-b4": lambda: fastvit_serving_workload(batch=4),
     }
-    if name not in builders:
+    base, batch = parse_workload(name)
+    if base not in builders:
         raise KeyError(f"unknown workload {name!r}; "
-                       f"choose from {sorted(builders)}")
-    return builders[name]()
+                       f"choose from {sorted(builders)} "
+                       f"(optionally with a -b<N> batch suffix)")
+    layers = builders[base]()
+    return with_batch(layers, batch) if batch != 1 else layers
+
+
+def parse_workload(name: str) -> tuple:
+    """Split a registry name into ``(base, batch)``: a trailing
+    ``-b<N>`` is the serving-batch suffix (``edgenext-s-b4`` ->
+    ``("edgenext-s", 4)``), anything else is batch 1.  A name whose
+    base segment itself ends in ``-b<N>`` never occurs in the registry,
+    so the parse is unambiguous."""
+    import re
+    m = re.fullmatch(r"(.+)-b(\d+)", name)
+    if m and int(m.group(2)) >= 1:
+        return m.group(1), int(m.group(2))
+    return name, 1
 
 
 WORKLOADS = ("edgenext-s", "edgenext-s-b4", "edgenext-reduced", "vit-tiny",

@@ -28,8 +28,19 @@ from repro.core.costmodel import HWSpec
 from repro.core.memory import apply_mem_overrides
 from repro.core.schedule import CONFIG_STACK, evaluate_stack
 from repro.search import (WORKLOADS, auto_schedule, cached_search, dse,
-                          get_workload, save_schedule)
+                          get_workload, parse_workload, save_schedule)
 from repro.search.perf import PerfRecorder
+
+
+def _workload_name(name: str) -> str:
+    """Any registered base name, optionally with a ``-b<N>`` serving
+    batch suffix (``edgenext-s-b16``, ``vit-tiny-b64``, ...)."""
+    base, _ = parse_workload(name)
+    if base not in WORKLOADS and name not in WORKLOADS:
+        raise argparse.ArgumentTypeError(
+            f"unknown workload {name!r} (bases: {', '.join(WORKLOADS)}; "
+            f"any base takes a -b<N> batch suffix)")
+    return name
 
 
 def _build_hw(args: argparse.Namespace) -> HWSpec:
@@ -52,7 +63,10 @@ def _build_hw(args: argparse.Namespace) -> HWSpec:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro.search", description=__doc__)
-    ap.add_argument("--workload", default="edgenext-s", choices=WORKLOADS)
+    ap.add_argument("--workload", default="edgenext-s",
+                    type=_workload_name, metavar="NAME",
+                    help=f"one of {', '.join(WORKLOADS)}, each accepting "
+                         f"a -b<N> serving-batch suffix")
     ap.add_argument("--out", type=Path, default=None,
                     help="write the schedule artifact here")
     ap.add_argument("--cache-dir", type=Path, default=None,

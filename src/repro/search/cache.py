@@ -5,12 +5,25 @@ version); ``schedule_key`` hashes that triple so repeated CLI /
 benchmark invocations reuse the artifact instead of re-running the DP.
 Artifacts are plain JSON (one file per schedule) so they can be diffed,
 committed, or consumed by external tooling.
+
+Writes are atomic: ``save_schedule`` lands the document in a
+same-directory temp file and ``os.replace``s it into place, so a
+reader — including another ``cached_search`` racing on the same key —
+observes either no artifact or a complete one, never a truncated JSON
+(which would replay as ``cache.corrupt``).  Under write contention a
+per-key claim file additionally serializes the store itself: of N
+processes missing on one key concurrently, exactly one performs the
+store; the others still search (they need the result) but skip the
+redundant write (``cache.store_skipped``).
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import json
+import os
+import tempfile
+import time
 from pathlib import Path
 from typing import List, Optional
 
@@ -52,12 +65,82 @@ def schedule_key(layers: List[Layer], hw: HWSpec,
 
 
 def save_schedule(schedule, path: Path) -> Path:
-    """Write a Schedule (dataclass) as a JSON artifact."""
+    """Write a Schedule (dataclass) as a JSON artifact, atomically.
+
+    The document goes to a same-directory ``*.tmp`` file first and is
+    ``os.replace``d into place, so a concurrent reader (or a parallel
+    ``--jobs`` sweep / second serving worker racing on the same key)
+    never observes a truncated artifact: the path either does not exist
+    yet or holds complete JSON.  A writer crashing inside the window
+    leaves at most a stray temp file, which no loader ever matches."""
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps(dataclasses.asdict(schedule), indent=1,
-                               sort_keys=True))
+    blob = json.dumps(dataclasses.asdict(schedule), indent=1,
+                      sort_keys=True)
+    fd, tmp = tempfile.mkstemp(dir=path.parent,
+                               prefix=f".{path.name}.", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     return path
+
+
+# a claim older than this is stale even if its pid looks alive (pid
+# reuse): the claiming search should take milliseconds, not minutes
+_CLAIM_STALE_S = 120.0
+
+
+def _claim_store(path: Path) -> bool:
+    """Try to claim the store of one artifact key via an exclusive
+    ``<path>.lock`` file holding the claimant's pid.  Returns True when
+    this process owns the store (and must ``_release_store`` after the
+    ``os.replace``), False when another live writer already holds it.
+    A claim whose owner died mid-search (or that outlived
+    ``_CLAIM_STALE_S``) is broken and re-taken, so a crashed writer can
+    never wedge the key."""
+    lock = Path(f"{path}.lock")
+    lock.parent.mkdir(parents=True, exist_ok=True)
+    for _ in range(2):
+        try:
+            fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            try:
+                pid = int(lock.read_text() or "0")
+                age = time.time() - lock.stat().st_mtime
+            except (OSError, ValueError):
+                continue        # holder released between open and read
+            alive = False
+            if pid > 0:
+                try:
+                    os.kill(pid, 0)
+                    alive = True
+                except (OSError, PermissionError):
+                    alive = False
+            if alive and age < _CLAIM_STALE_S:
+                return False
+            try:                # stale claim: break it and retry once
+                os.unlink(lock)
+            except OSError:
+                pass
+            continue
+        with os.fdopen(fd, "w") as f:
+            f.write(str(os.getpid()))
+        return True
+    return False
+
+
+def _release_store(path: Path) -> None:
+    try:
+        os.unlink(f"{path}.lock")
+    except OSError:
+        pass
 
 
 def _load(path: Path):
@@ -114,8 +197,17 @@ def _remap_layer_names(sched, layers: List[Layer]):
     the ordered shape list is identical, so the artifact's chain (its
     group tuples tile the chain in order) maps positionally onto the
     request's names.  Returns the remapped Schedule, or None when the
-    artifact's name list does not tile the chain (corrupt artifact —
-    caller re-searches)."""
+    artifact's name list does not tile the chain or the positional
+    pairing is ambiguous (corrupt artifact — caller re-searches).
+
+    Duplicate names need care: every remapped field except the group
+    tuples is *keyed by name*, so a name is only remappable when the
+    positional pairing is a consistent function.  An artifact name
+    appearing at two positions that pair with two *different* request
+    names (or two artifact names collapsing onto one request name)
+    cannot be applied unambiguously — ``dict(zip(old, new))`` would
+    silently keep the last pairing and mis-remap mappings / orders /
+    tiles — so the remap is rejected instead."""
     import dataclasses as _dc
     old = [n for g in sched.groups for n in g]
     new = [l.name for l in layers]
@@ -123,7 +215,12 @@ def _remap_layer_names(sched, layers: List[Layer]):
         return sched
     if len(old) != len(new):
         return None
-    m = dict(zip(old, new))
+    m: dict = {}
+    for o, n in zip(old, new):
+        if m.setdefault(o, n) != n:
+            return None         # one artifact name -> two request names
+    if len(set(m.values())) != len(m):
+        return None             # two artifact names -> one request name
 
     def _join_key(joined: str) -> str:
         return " + ".join(m.get(p, p) for p in joined.split(" + "))
@@ -160,8 +257,15 @@ def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
     events: ``hit`` (plus ``rename_remap`` when the artifact needed
     positional renaming), ``version_reject`` (stale SEARCH_VERSION),
     ``corrupt`` (unreadable / non-reconstructing / key-mismatched /
-    non-tiling artifact), and ``miss`` -> ``store`` when the search
-    runs — instead of silently falling back to a re-search."""
+    non-tiling / ambiguously-named artifact), and ``miss`` ->
+    ``store`` when the search runs — instead of silently falling back
+    to a re-search.
+
+    Concurrency: artifact writes are atomic (``save_schedule``), and
+    of N processes missing on the same key at once exactly one claims
+    the store via a per-key lock file; the rest search and return
+    without writing (``store_skipped``), so a hammered cache dir sees
+    one ``store`` per key and zero corrupt replays."""
     from repro.search.auto import auto_schedule
     hw = hw or HWSpec()
     if cache_dir is None:
@@ -198,8 +302,20 @@ def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
     obs.count("cache.miss")
     obs.event("cache.replay", outcome="miss", workload=workload, key=key,
               refresh=refresh)
-    sched = auto_schedule(layers, hw, workload=workload,
-                          tile_mode=tile_mode, spatial_mode=spatial_mode)
-    save_schedule(sched, path)
-    obs.count("cache.store")
+    # claim BEFORE the search so concurrent missers resolve the single
+    # writer up front; ``refresh`` is an explicit operator override and
+    # always stores (atomic replace makes the last writer win safely)
+    claimed = _claim_store(path)
+    try:
+        sched = auto_schedule(layers, hw, workload=workload,
+                              tile_mode=tile_mode,
+                              spatial_mode=spatial_mode)
+        if claimed or refresh:
+            save_schedule(sched, path)
+            obs.count("cache.store")
+        else:
+            obs.count("cache.store_skipped")
+    finally:
+        if claimed:
+            _release_store(path)
     return sched

@@ -1,0 +1,31 @@
+"""repro.serve — schedule-cache-backed serving on top of ``repro.search``.
+
+The ROADMAP's serving arc: searched schedules are *reused* at request
+time, never re-derived.  Three pieces:
+
+  store    — ``ServeStore``, the warm artifact store: an in-process
+             memory layer over the content-addressed JSON schedule
+             cache; ``warm()`` fans the (workload x batch) grid out
+             over a process pool, a served lookup is a dict probe.
+  batcher  — batch co-search (``co_search``): batch is a first-class
+             mapspace dim (``core.workload.with_batch``), each level in
+             {1, 4, 16, 64} carries its own searched schedule, and the
+             latency-vs-batch curve is the policy's input.
+  policy   — ``ServePolicy`` / ``pick_batch``: per arrival rate, the
+             expected-latency-minimizing batch level (batch-fill wait
+             vs dispatch amortization vs data-parallel fan-out over a
+             device mesh — see ``runtime.pipeline.data_parallel``).
+
+CLI: ``PYTHONPATH=src python -m repro.serve --warm --arch edgenext-s``.
+"""
+from repro.serve.batcher import BatchPoint, co_search
+from repro.serve.policy import (BatchPick, ServePolicy, distinct_batches,
+                                pick_batch, rate_table)
+from repro.serve.store import (BATCH_LEVELS, ServeStore, WarmReport,
+                               canonical_name)
+
+__all__ = [
+    "BATCH_LEVELS", "BatchPick", "BatchPoint", "ServePolicy", "ServeStore",
+    "WarmReport", "canonical_name", "co_search", "distinct_batches",
+    "pick_batch", "rate_table",
+]

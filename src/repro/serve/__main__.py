@@ -1,0 +1,135 @@
+"""CLI: warm the serve store and serve schedule lookups from it.
+
+    # pre-search batch {1,4,16,64} schedules for one arch into the store
+    PYTHONPATH=src python -m repro.serve --warm --arch edgenext-s \
+        --cache-dir /tmp/serve-cache --jobs 4
+
+    # a serving request against the warmed store (fresh process: the
+    # lookup replays the artifact — cache.hit, never the DP)
+    PYTHONPATH=src python -m repro.serve --arch edgenext-s --lookup 4 \
+        --cache-dir /tmp/serve-cache
+
+    # the batch-policy table: latency-vs-batch curve + per-rate picks
+    PYTHONPATH=src python -m repro.serve --arch edgenext-s \
+        --rates 2,15,60 --devices 4 --cache-dir /tmp/serve-cache
+
+Rows print as ``name,value,note`` CSV (the same shape as the BENCH
+surface); counters from the lookup path print as ``serve.cache.*`` so a
+smoke run can assert hit/miss outcomes directly.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+from repro import obs
+from repro.core.costmodel import HWSpec
+from repro.serve.batcher import co_search
+from repro.serve.policy import distinct_batches, parse_rates, rate_table
+from repro.serve.store import BATCH_LEVELS, ServeStore
+
+_COUNTER_ORDER = ("hit", "miss", "store", "store_skipped", "rename_remap",
+                  "version_reject", "corrupt")
+
+
+def _counter_rows(prefix: str, counters) -> None:
+    for name in _COUNTER_ORDER:
+        print(f"{prefix}.cache.{name},{counters.get(f'cache.{name}', 0)},")
+    mem = counters.get("serve.store.mem_hit", 0)
+    if mem:
+        print(f"{prefix}.mem_hit,{mem},served from the in-process layer")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.serve", description=__doc__)
+    ap.add_argument("--arch", action="append", default=None,
+                    metavar="WORKLOAD",
+                    help="registered workload to serve (repeatable; "
+                         "default: edgenext-s)")
+    ap.add_argument("--cache-dir", type=Path, default=None,
+                    help="shared artifact store directory (default: a "
+                         "fresh temp dir, printed — pass a path to "
+                         "reuse the store across invocations)")
+    ap.add_argument("--warm", action="store_true",
+                    help="pre-search the (arch x batch) grid into the "
+                         "store")
+    ap.add_argument("--batches", default=None, metavar="B,B,...",
+                    help="co-searched batch levels (default 1,4,16,64)")
+    ap.add_argument("--jobs", type=int, default=0, metavar="N",
+                    help="process-pool fan-out for --warm cold searches")
+    ap.add_argument("--lookup", type=int, default=None, metavar="BATCH",
+                    help="serve one (arch, batch) request and print its "
+                         "cache counters + wall time")
+    ap.add_argument("--rates", default=None, metavar="RPS,RPS,...",
+                    help="print the latency-vs-batch curve and the "
+                         "policy's batch pick at each arrival rate")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="data-parallel mesh width available to the "
+                         "policy (batch b served as b/devices shards)")
+    ap.add_argument("--dispatch-ms", type=float, default=20.0,
+                    help="per-batch launch overhead the policy "
+                         "amortizes (host dispatch + weight upload)")
+    args = ap.parse_args(argv)
+
+    arches = args.arch or ["edgenext-s"]
+    batches = (tuple(int(b) for b in args.batches.split(","))
+               if args.batches else BATCH_LEVELS)
+    cache_dir = args.cache_dir or Path(
+        tempfile.mkdtemp(prefix="repro-serve-"))
+    store = ServeStore(cache_dir, HWSpec())
+    print(f"# serve store at {cache_dir} "
+          f"(arch={','.join(arches)} batches={list(batches)})")
+
+    if args.warm:
+        t0 = time.perf_counter()
+        with obs.tracing() as tr:
+            rep = store.warm(arches, batches=batches, jobs=args.jobs)
+        dt = time.perf_counter() - t0
+        print(f"serve.warm.entries,{len(rep.entries)},"
+              f"{rep.searched} cold-searched, jobs={args.jobs}")
+        print(f"serve.warm.wall_ms,{dt * 1e3:.6g},")
+        _counter_rows("serve.warm", tr.counters)
+
+    if args.lookup is not None:
+        for arch in arches:
+            with obs.tracing() as tr:
+                t0 = time.perf_counter()
+                sched = store.lookup(arch, args.lookup)
+                dt = time.perf_counter() - t0
+            name = store.resolve(arch, args.lookup)[0]
+            print(f"serve.lookup.wall_ms,{dt * 1e3:.6g},{name}")
+            print(f"serve.lookup.latency_ms,"
+                  f"{sched.cost['latency_s'] * 1e3:.6g},"
+                  f"groups={len(sched.groups)} "
+                  f"lowered={len(sched.lowered)}")
+            _counter_rows("serve", tr.counters)
+
+    if args.rates:
+        rates = parse_rates(args.rates)
+        for arch in arches:
+            pts = co_search(store, arch, batches=batches)
+            for p in pts:
+                print(f"serve.batch.{p.workload}.latency_ms,"
+                      f"{p.latency_s * 1e3:.6g},"
+                      f"{p.throughput_rps:.1f} rps back-to-back")
+            picks = rate_table(pts, rates,
+                               dispatch_s=args.dispatch_ms * 1e-3,
+                               devices=args.devices)
+            for pk in picks:
+                sat = " SATURATED" if pk.saturated else ""
+                print(f"serve.policy.{arch}.rate{pk.rate_rps:g}.batch,"
+                      f"{pk.point.batch},"
+                      f"exp_latency={pk.expected_latency_s * 1e3:.1f}ms "
+                      f"sustained={pk.sustained_rps:.1f}rps "
+                      f"shards={pk.devices}x b{pk.shard_point.batch}"
+                      f"{sat}")
+            print(f"serve.policy.{arch}.distinct_batches,"
+                  f"{distinct_batches(picks)},over rates {rates}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

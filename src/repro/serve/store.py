@@ -1,0 +1,207 @@
+"""The warm artifact store: schedule lookups at request time.
+
+A serving front-end must never pay the DP for a workload it has seen
+before.  ``ServeStore`` layers two caches over the auto-scheduler:
+
+  memory   — an in-process dict keyed by the content hash
+             (``search.cache.schedule_key``), filled by ``warm()`` /
+             first lookup; a hot-path hit is a dict probe plus nothing
+             (no JSON parse, no remap), which is what drives the
+             ``search.serve.hit_latency_ms`` BENCH row two-plus orders
+             of magnitude under the cold search;
+  disk     — the content-addressed JSON artifact cache
+             (``search.cache.cached_search``), shared across processes
+             and across restarts; misses fall through to the DP and
+             store atomically.
+
+A request is ``(workload, batch)`` against one ``HWSpec`` + tile/spatial
+mode, i.e. the full ``(workload_sig, hw_sig, tile_mode, spatial_mode,
+batch)`` tuple — ``schedule_key`` hashes the batched layer signatures,
+the HW signature, and both mode strings, so every component of the
+request is in the key.  Per-request layer lists and keys are resolved
+once and memoized (a serving loop asks for the same few endpoints
+millions of times).
+
+``warm()`` fans the (workload x batch) grid out over a process pool
+(the same ``--jobs`` shape as the DSE sweeps); each worker runs
+``cached_search`` against the shared cache dir — the per-key store
+claim in ``search.cache`` guarantees exactly one artifact write per key
+no matter how the pool races — and the parent then faults every
+artifact into memory.  Every outcome is visible through the ``cache.*``
+obs counters (+ ``serve.store.mem_hit`` for memory-layer hits).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro import obs
+from repro.core.costmodel import HWSpec
+from repro.core.workload import Layer, with_batch
+from repro.search import get_workload, parse_workload
+from repro.search.cache import cached_search, schedule_key
+
+# the co-searched serving batch levels (ROADMAP item 1: the -b4 registry
+# shapes generalized to a per-traffic-level family)
+BATCH_LEVELS = (1, 4, 16, 64)
+
+
+def canonical_name(workload: str, batch: int) -> str:
+    """Registry name of one (workload, batch) request: the base name
+    for batch 1, the ``-b<N>`` serving shape otherwise."""
+    base, b0 = parse_workload(workload)
+    b = b0 * batch
+    return base if b == 1 else f"{base}-b{b}"
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmReport:
+    """What one ``warm()`` pass touched."""
+    entries: Tuple[str, ...]          # canonical names now resident
+    keys: Tuple[str, ...]             # their content hashes
+    searched: int                     # grid points that missed on disk
+
+
+def _warm_worker(args):
+    """Process-pool worker: resolve + cached-search one grid point
+    (module-level so it pickles under spawn).  Returns the canonical
+    name, its key, and the worker's cache counters so the caller can
+    fold them into its own tracer."""
+    name, hw, cache_dir, tile_mode, spatial_mode = args
+    layers = get_workload(name)
+    with obs.tracing() as tr:
+        cached_search(layers, hw, workload=name, cache_dir=cache_dir,
+                      tile_mode=tile_mode, spatial_mode=spatial_mode)
+    key = schedule_key(layers, hw, tile_mode=tile_mode,
+                       spatial_mode=spatial_mode)
+    return name, key, dict(tr.counters)
+
+
+class ServeStore:
+    """Warm schedule store over one cache directory + HWSpec."""
+
+    def __init__(self, cache_dir, hw: Optional[HWSpec] = None, *,
+                 tile_mode: str = "full",
+                 spatial_mode: str = "factored") -> None:
+        self.cache_dir = Path(cache_dir)
+        self.hw = hw or HWSpec()
+        self.tile_mode = tile_mode
+        self.spatial_mode = spatial_mode
+        self._mem: Dict[str, object] = {}           # key -> Schedule
+        # (canonical name) -> (layers, key): resolved once per endpoint
+        self._resolved: Dict[str, Tuple[List[Layer], str]] = {}
+
+    # -- request resolution -------------------------------------------
+
+    def resolve(self, workload: str, batch: int = 1
+                ) -> Tuple[str, List[Layer], str]:
+        """(canonical name, layer list, content key) of one request."""
+        name = canonical_name(workload, batch)
+        hit = self._resolved.get(name)
+        if hit is None:
+            layers = get_workload(name)
+            key = schedule_key(layers, self.hw, tile_mode=self.tile_mode,
+                               spatial_mode=self.spatial_mode)
+            hit = self._resolved[name] = (layers, key)
+        return name, hit[0], hit[1]
+
+    def key_for(self, workload: str, batch: int = 1) -> str:
+        return self.resolve(workload, batch)[2]
+
+    # -- lookups ------------------------------------------------------
+
+    def lookup(self, workload: str, batch: int = 1):
+        """Serve one ``(workload, batch)`` request.
+
+        Memory hit: dict probe, counted as ``cache.hit`` (it is one —
+        the artifact layer was just already faulted in) plus
+        ``serve.store.mem_hit``.  Memory miss: ``cached_search``
+        against the shared dir (disk replay or, cold, the DP + atomic
+        store), then the result is pinned in memory for the next
+        request.  Always returns a Schedule."""
+        name, layers, key = self.resolve(workload, batch)
+        sched = self._mem.get(key)
+        if sched is not None:
+            obs.count("cache.hit")
+            obs.count("serve.store.mem_hit")
+            obs.event("serve.lookup", workload=name, key=key,
+                      outcome="mem_hit")
+            return sched
+        sched = cached_search(layers, self.hw, workload=name,
+                              cache_dir=self.cache_dir,
+                              tile_mode=self.tile_mode,
+                              spatial_mode=self.spatial_mode)
+        self._mem[key] = sched
+        return sched
+
+    def lookup_layers(self, layers: Sequence[Layer], *,
+                      workload: str = "custom"):
+        """Same serving path for an unregistered layer chain (the
+        content hash, not the name, is the identity)."""
+        layers = list(layers)
+        key = schedule_key(layers, self.hw, tile_mode=self.tile_mode,
+                           spatial_mode=self.spatial_mode)
+        sched = self._mem.get(key)
+        if sched is not None:
+            obs.count("cache.hit")
+            obs.count("serve.store.mem_hit")
+            return sched
+        sched = cached_search(layers, self.hw, workload=workload,
+                              cache_dir=self.cache_dir,
+                              tile_mode=self.tile_mode,
+                              spatial_mode=self.spatial_mode)
+        self._mem[key] = sched
+        return sched
+
+    def resident(self, workload: str, batch: int = 1) -> bool:
+        return self.key_for(workload, batch) in self._mem
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    # -- warming ------------------------------------------------------
+
+    def warm(self, workloads: Sequence[str], *,
+             batches: Sequence[int] = BATCH_LEVELS,
+             jobs: int = 0) -> WarmReport:
+        """Pre-search the (workload x batch) grid and fault every
+        schedule into memory.
+
+        Grid points collapsing onto one content key (e.g. a workload
+        listed both bare and with a ``-b<N>`` suffix) are deduplicated
+        before the fan-out, so each unique key is searched — and, via
+        the per-key store claim, stored — exactly once.  ``jobs > 1``
+        fans the cold searches out over a process pool; the workers'
+        ``cache.*`` counters are folded back into the caller's tracer
+        (the span analogue of ``PerfRecorder.merge``)."""
+        grid: Dict[str, str] = {}                   # key -> canonical name
+        for wl in workloads:
+            for b in batches:
+                name, _, key = self.resolve(wl, b)
+                grid.setdefault(key, name)
+        todo = {k: n for k, n in grid.items() if k not in self._mem}
+        with obs.span("serve.warm", entries=len(grid), jobs=jobs,
+                      todo=len(todo)):
+            searched = 0
+            if jobs > 1 and todo:
+                from concurrent.futures import ProcessPoolExecutor
+                with ProcessPoolExecutor(max_workers=jobs) as ex:
+                    results = list(ex.map(
+                        _warm_worker,
+                        [(n, self.hw, self.cache_dir, self.tile_mode,
+                          self.spatial_mode) for n in todo.values()]))
+                for _, _, counters in results:
+                    searched += counters.get("cache.miss", 0)
+                    for ck, cv in counters.items():
+                        obs.count(ck, cv)
+            # fault everything into memory through the serving path
+            # (serial warm does its cold searches right here)
+            for key, name in grid.items():
+                if key in self._mem:
+                    continue
+                if not (self.cache_dir / f"{name}-{key}.json").exists():
+                    searched += 1
+                self.lookup(name)
+        return WarmReport(entries=tuple(grid.values()),
+                          keys=tuple(grid.keys()), searched=searched)

@@ -1,0 +1,390 @@
+"""Serving layer: batch as a mapspace dim, the warm artifact store,
+the arrival-rate batching policy, cache atomicity under crashes and
+concurrent writers, and the data-parallel fan-out."""
+import dataclasses
+import hashlib
+import json
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+from concurrent.futures import ProcessPoolExecutor
+from pathlib import Path
+
+import pytest
+
+from repro import obs
+from repro.core.costmodel import HWSpec
+from repro.core.workload import (Layer, edgenext_serving_workload,
+                                 fastvit_serving_workload,
+                                 mobilevit_serving_workload, vit_workload,
+                                 with_batch)
+from repro.search import get_workload, parse_workload
+from repro.search.cache import (SEARCH_VERSION, _remap_layer_names,
+                                cached_search, load_schedule,
+                                schedule_key)
+from repro.serve import (BatchPoint, ServeStore, canonical_name,
+                         distinct_batches, pick_batch, rate_table)
+
+# JAX_PLATFORMS=cpu: the image ships libtpu; without the override a
+# child process burns 60+s probing a TPU backend that does not exist.
+ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+       "JAX_PLATFORMS": "cpu",
+       "XLA_FLAGS": "--xla_force_host_platform_device_count=4"}
+
+
+# ---------------------------------------------------------------------------
+# batch as a first-class mapspace dim
+# ---------------------------------------------------------------------------
+
+
+def test_with_batch_scales_b_only():
+    wl = get_workload("edgenext-reduced")
+    b4 = with_batch(wl, 4)
+    assert [l.name for l in b4] == [l.name for l in wl]
+    for a, b in zip(wl, b4):
+        assert b.b == 4 * a.b
+        assert dataclasses.replace(b, b=a.b) == a
+
+
+def test_with_batch_identity_and_validation():
+    wl = get_workload("edgenext-reduced")
+    same = with_batch(wl, 1)
+    assert same == wl and same is not wl
+    with pytest.raises(ValueError):
+        with_batch(wl, 0)
+
+
+def test_with_batch_matches_serving_builders():
+    """The generalized transform reproduces every hand-written -b4
+    serving builder layer-for-layer (names included)."""
+    for name, builder in (("edgenext-s", edgenext_serving_workload),
+                          ("fastvit-s", fastvit_serving_workload),
+                          ("mobilevit-s", mobilevit_serving_workload)):
+        assert with_batch(get_workload(name), 4) == builder(batch=4)
+        assert get_workload(f"{name}-b4") == builder(batch=4)
+
+
+def test_registry_resolves_any_batch_suffix():
+    assert get_workload("vit-tiny-b16") == with_batch(vit_workload(), 16)
+    assert parse_workload("edgenext-s-b64") == ("edgenext-s", 64)
+    assert parse_workload("edgenext-s") == ("edgenext-s", 1)
+    # 'b0' is an architecture suffix, not a batch level
+    assert parse_workload("efficientvit-b0") == ("efficientvit-b0", 1)
+    with pytest.raises(KeyError):
+        get_workload("no-such-arch-b4")
+
+
+def test_canonical_name_composes_batches():
+    assert canonical_name("edgenext-s", 4) == "edgenext-s-b4"
+    assert canonical_name("edgenext-s", 1) == "edgenext-s"
+    assert canonical_name("edgenext-s-b4", 4) == "edgenext-s-b16"
+
+
+# ---------------------------------------------------------------------------
+# cache correctness: atomic writes, duplicate names, concurrent writers
+# ---------------------------------------------------------------------------
+
+_TINY = [Layer("l0", "pwconv", k=8, c=8, ox=4, oy=4),
+         Layer("l1", "dwconv", c=8, ox=4, oy=4, fx=3, fy=3)]
+
+
+def test_save_schedule_atomic_under_kill(tmp_path):
+    """SIGKILL a writer loop at arbitrary instants: the artifact is
+    always either absent or complete valid JSON, and the temp files a
+    crash can leave behind never match the ``*.json`` loader glob."""
+    art = tmp_path / "wl-abc.json"
+    child = textwrap.dedent(f"""
+        import dataclasses, sys
+        from pathlib import Path
+        from repro.search.cache import save_schedule
+
+        @dataclasses.dataclass
+        class Doc:
+            version: int
+            payload: str
+
+        doc = Doc(version=1, payload="x" * 500_000)
+        path = Path({str(art)!r})
+        print("ready", flush=True)
+        while True:
+            save_schedule(doc, path)
+    """)
+    for delay in (0.0, 0.01, 0.05):
+        p = subprocess.Popen([sys.executable, "-c", child], env=ENV,
+                             cwd="/root/repo", stdout=subprocess.PIPE,
+                             text=True)
+        try:
+            assert p.stdout.readline().strip() == "ready"
+            time.sleep(delay)
+        finally:
+            p.send_signal(signal.SIGKILL)
+            p.wait(timeout=30)
+        if art.exists():
+            doc = json.loads(art.read_text())      # complete, parseable
+            assert len(doc["payload"]) == 500_000
+        leftovers = list(tmp_path.glob("*.json"))
+        assert leftovers in ([], [art]), leftovers
+
+
+def test_remap_rejects_duplicate_layer_names(tmp_path):
+    """Regression: an artifact whose chain holds two identically named
+    layers cannot be positionally remapped onto distinct request names
+    — ``dict(zip())`` used to keep the last pairing silently.  The
+    remap must reject it; ``cached_search`` then treats the artifact as
+    corrupt and re-searches."""
+    hw = HWSpec()
+    twin = [dataclasses.replace(_TINY[0], name="n0"),
+            dataclasses.replace(_TINY[0], name="n1")]    # equal signatures
+    sched = cached_search(twin, hw, workload="twin", cache_dir=tmp_path)
+
+    # unit level: duplicate old names pairing with two new names, and
+    # two old names collapsing onto one new name, both reject
+    dup = dataclasses.replace(
+        sched, groups=tuple(("n0",) for _ in sched.groups))
+    assert _remap_layer_names(dup, twin) is None
+    collapse = [dataclasses.replace(l, name="same") for l in twin]
+    assert _remap_layer_names(sched, collapse) is None
+
+    # integration: corrupt the stored artifact so both chain positions
+    # claim the same name, then replay — must re-search, not mis-remap
+    art = next(tmp_path.glob("twin-*.json"))
+    art.write_text(art.read_text().replace('"n1"', '"n0"'))
+    with obs.tracing() as tr:
+        again = cached_search(twin, hw, workload="twin",
+                              cache_dir=tmp_path)
+    assert tr.counters.get("cache.corrupt") == 1
+    assert tr.counters.get("cache.miss") == 1
+    assert tr.counters.get("cache.store") == 1
+    assert not tr.counters.get("cache.hit")
+    assert dataclasses.asdict(again) == dataclasses.asdict(sched)
+
+
+def _race_worker(args):
+    """Race one cached_search key from a pool process; all workers hold
+    until a shared deadline so they miss together."""
+    cache_dir, deadline = args
+    time.sleep(max(0.0, deadline - time.time()))
+    hw = HWSpec()
+    with obs.tracing() as tr:
+        sched = cached_search(_TINY, hw, workload="race",
+                              cache_dir=cache_dir)
+    blob = json.dumps(dataclasses.asdict(sched), sort_keys=True)
+    return dict(tr.counters), hashlib.sha256(blob.encode()).hexdigest()
+
+
+def test_concurrent_cached_search_single_store(tmp_path):
+    """N processes racing one cold key: zero corrupt replays, exactly
+    one store (the claim), identical schedules everywhere, and a valid
+    artifact on disk."""
+    n = 4
+    with ProcessPoolExecutor(max_workers=n) as ex:
+        deadline = time.time() + 1.5           # post-spawn sync point
+        results = list(ex.map(_race_worker,
+                              [(tmp_path, deadline)] * n))
+    counters = [c for c, _ in results]
+    digests = {d for _, d in results}
+    total = lambda k: sum(c.get(f"cache.{k}", 0) for c in counters)
+    assert total("corrupt") == 0
+    assert total("store") == 1
+    assert total("store") + total("store_skipped") + total("hit") == n
+    assert len(digests) == 1
+    key = schedule_key(_TINY, HWSpec())
+    replay = load_schedule(tmp_path / f"race-{key}.json")
+    assert replay is not None and replay.key == key
+    assert not list(tmp_path.glob("*.lock"))   # claims all released
+
+
+# ---------------------------------------------------------------------------
+# the warm store
+# ---------------------------------------------------------------------------
+
+
+def test_store_warm_then_hit_counters(tmp_path):
+    store = ServeStore(tmp_path, HWSpec())
+    with obs.tracing() as tr:
+        rep = store.warm(["edgenext-reduced"], batches=(1, 2))
+    assert rep.entries == ("edgenext-reduced", "edgenext-reduced-b2")
+    assert rep.searched == 2 and len(rep.keys) == 2
+    assert tr.counters.get("cache.miss") == 2
+    assert tr.counters.get("cache.store") == 2
+    assert len(store) == 2
+
+    # warm store: every lookup is a memory hit, never the DP
+    with obs.tracing() as tr:
+        s1 = store.lookup("edgenext-reduced", 1)
+        s2 = store.lookup("edgenext-reduced", 2)
+    assert tr.counters.get("cache.hit") == 2
+    assert tr.counters.get("serve.store.mem_hit") == 2
+    assert not tr.counters.get("cache.miss")
+    assert s2.cost["latency_s"] > s1.cost["latency_s"]
+
+    # second warm over a superset: only the new grid point searches
+    with obs.tracing() as tr:
+        rep2 = store.warm(["edgenext-reduced"], batches=(1, 2, 4))
+    assert rep2.searched == 1 and len(rep2.entries) == 3
+
+
+def test_store_disk_tier_and_version_reject(tmp_path):
+    hot = ServeStore(tmp_path, HWSpec())
+    hot.warm(["edgenext-reduced"], batches=(1,))
+    # a fresh store (new process analogue) replays from disk: cache.hit
+    # without the memory layer
+    cold = ServeStore(tmp_path, HWSpec())
+    with obs.tracing() as tr:
+        cold.lookup("edgenext-reduced", 1)
+    assert tr.counters.get("cache.hit") == 1
+    assert not tr.counters.get("serve.store.mem_hit")
+    assert not tr.counters.get("cache.miss")
+    # stale engine version: rejected, re-searched, re-stored
+    art = next(tmp_path.glob("edgenext-reduced-*.json"))
+    doc = json.loads(art.read_text())
+    doc["version"] = SEARCH_VERSION - 1
+    art.write_text(json.dumps(doc))
+    stale = ServeStore(tmp_path, HWSpec())
+    with obs.tracing() as tr:
+        stale.lookup("edgenext-reduced", 1)
+    assert tr.counters.get("cache.version_reject") == 1
+    assert tr.counters.get("cache.miss") == 1
+    assert tr.counters.get("cache.store") == 1
+
+
+def test_store_warm_process_pool_folds_counters(tmp_path):
+    store = ServeStore(tmp_path, HWSpec())
+    with obs.tracing() as tr:
+        rep = store.warm(["edgenext-reduced"], batches=(1, 2), jobs=2)
+    assert rep.searched == 2
+    # workers' counters folded back + the parent's memory faulting
+    assert tr.counters.get("cache.miss") == 2
+    assert tr.counters.get("cache.store") == 2
+    assert tr.counters.get("cache.hit") == 2    # parent replays artifacts
+    assert store.resident("edgenext-reduced", 2)
+
+
+def test_store_dedupes_grid_aliases(tmp_path):
+    """'wl' at batch 2 and 'wl-b2' at batch 1 are one content key:
+    warmed, searched, and stored exactly once."""
+    store = ServeStore(tmp_path, HWSpec())
+    with obs.tracing() as tr:
+        rep = store.warm(["edgenext-reduced", "edgenext-reduced-b2"],
+                         batches=(1, 2))
+    assert len(rep.entries) == 3               # b1, b2, b4
+    assert tr.counters.get("cache.store") == 3
+    assert len(list(tmp_path.glob("*.json"))) == 3
+
+
+# ---------------------------------------------------------------------------
+# the batching policy
+# ---------------------------------------------------------------------------
+
+
+def _linear_points(lat1: float = 0.05):
+    """Synthetic co-searched curve with latency linear in batch (what
+    the compute-bound cost model actually produces)."""
+    return [BatchPoint(workload=f"wl-b{b}", batch=b,
+                       latency_s=lat1 * b, energy_j=1.0 * b,
+                       edp=lat1 * b * b, key=f"k{b}")
+            for b in (1, 4, 16, 64)]
+
+
+def test_policy_non_degenerate_across_rates():
+    pts = _linear_points()
+    picks = rate_table(pts, (2.0, 15.0, 60.0),
+                       dispatch_s=0.020, devices=4)
+    assert [p.point.batch for p in picks] == [1, 4, 16]
+    assert distinct_batches(picks) >= 2
+    # every pick's throughput ceiling covers its arrival rate
+    assert all(not p.saturated for p in picks)
+    assert all(p.sustained_rps >= p.rate_rps for p in picks)
+
+
+def test_policy_shards_over_cosearched_levels_only():
+    pts = _linear_points()
+    pick = pick_batch(pts, 60.0, dispatch_s=0.020, devices=4)
+    # batch 16 served as 4 data-parallel shards of the searched b4
+    assert (pick.point.batch, pick.devices) == (16, 4)
+    assert pick.shard_point.batch == 4
+    # devices=3 cannot shard any level (no co-searched batch/3): the
+    # fan-out degrades to 1, never a scaled guess
+    pick3 = pick_batch(pts, 10.0, dispatch_s=0.020, devices=3)
+    assert pick3.devices == 1
+    assert pick3.shard_point == pick3.point
+
+
+def test_policy_single_device_low_rate_prefers_small_batch():
+    pts = _linear_points()
+    pick = pick_batch(pts, 0.5, dispatch_s=0.001, devices=1)
+    assert pick.point.batch == 1
+
+
+def test_policy_saturated_falls_back_to_max_throughput():
+    pts = _linear_points()
+    pick = pick_batch(pts, 1e6, dispatch_s=0.020, devices=1)
+    assert pick.saturated
+    best = max(pts, key=lambda p: p.batch / (0.020 + p.latency_s))
+    assert pick.point.batch == best.batch
+    with pytest.raises(ValueError):
+        pick_batch([], 1.0)
+
+
+# ---------------------------------------------------------------------------
+# data-parallel fan-out + serving CLI
+# ---------------------------------------------------------------------------
+
+
+def _run(code: str) -> str:
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=ENV,
+                       cwd="/root/repo", timeout=600)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def test_data_parallel_matches_single_device():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.runtime.pipeline import data_parallel
+
+        mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+        def fn(params, x):
+            return jnp.tanh(x @ params["w"] + params["b"])
+
+        k0, k1 = jax.random.split(jax.random.PRNGKey(0))
+        params = {"w": jax.random.normal(k0, (8, 8)),
+                  "b": jnp.ones((8,))}
+        x = jax.random.normal(k1, (16, 8))
+        dp = data_parallel(fn, mesh=mesh)
+        assert jnp.allclose(dp(params, x), fn(params, x), atol=1e-6)
+        try:
+            dp(params, x[:6])
+        except ValueError as e:
+            assert "not divisible" in str(e)
+        else:
+            raise AssertionError("indivisible batch accepted")
+        print("DPOK", jax.device_count())
+    """)
+    assert "DPOK 4" in out
+
+
+@pytest.mark.slow
+def test_serve_cli_warm_then_hit(tmp_path):
+    """End-to-end: warm in one process, serve the lookup from another —
+    the request replays the artifact (cache.hit) and never re-searches
+    (cache.miss stays 0)."""
+    base = ["--arch", "edgenext-reduced", "--batches", "1,2",
+            "--cache-dir", str(tmp_path)]
+    run = lambda extra: subprocess.run(
+        [sys.executable, "-m", "repro.serve"] + base + extra,
+        capture_output=True, text=True, env=ENV, cwd="/root/repo",
+        timeout=600)
+    warm = run(["--warm"])
+    assert warm.returncode == 0, warm.stderr[-3000:]
+    assert "serve.warm.cache.store,2," in warm.stdout
+    look = run(["--lookup", "2", "--rates", "2,60", "--devices", "2"])
+    assert look.returncode == 0, look.stderr[-3000:]
+    assert "serve.cache.hit,1," in look.stdout
+    assert "serve.cache.miss,0," in look.stdout
+    assert "serve.policy.edgenext-reduced.distinct_batches," \
+        in look.stdout
