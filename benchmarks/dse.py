@@ -191,6 +191,55 @@ def bench_spatial() -> List[Row]:
     return rows
 
 
+def bench_scan() -> List[Row]:
+    """The chunked-recurrence section: ``search.scan.*``.
+
+    For each scan workload (RWKV-6, RecurrentGemma): the searched
+    network-level chunk vs the fixed chunk=64 baseline on EDP (<= 1 by
+    construction, strictly < 1 wherever a non-64 chunk wins), the
+    chosen chunk and carry-state residence level, and the full
+    latency-vs-chunk curve over the candidate menu — the shape the
+    two-pass selection is exploiting.
+    """
+    from repro.search import get_workload
+    from repro.search.auto import (_SCAN_CHUNK_CANDIDATES, SCAN,
+                                   _auto_schedule)
+    rows: List[Row] = []
+    hw = HWSpec()
+    for name in ("rwkv6", "recurrentgemma"):
+        wl = get_workload(name)
+        key = name.replace("-", "_")
+
+        def _fixed(chunk):
+            return _auto_schedule(wl, hw, workload=name,
+                                  reconfigurable=True, tile_mode="full",
+                                  spatial_mode="factored", dedup=True,
+                                  memo=None, perf=None, scan_chunk=chunk)
+
+        sched = auto_schedule(wl, hw, workload=name)
+        ref = _fixed(64)
+        chunk = next(t["chunk"] for t in sched.tiles.values()
+                     if "chunk" in t)
+        rows.append((f"search.scan.{key}.edp_searched_vs_fixed64",
+                     sched.cost["edp"] / ref.cost["edp"],
+                     f"<=1 by construction; searched chunk={chunk}"))
+        state = next((l.name, t) for l in wl for t in
+                     (sched.tiles.get(l.name),)
+                     if l.op == SCAN and t)[1]
+        rows.append((f"search.scan.{key}.chunk", chunk,
+                     f"state {state['state_bytes']} B resident at "
+                     f"'{state['level']}'"))
+        max_t = max(l.ox for l in wl if l.op == SCAN)
+        for c in _SCAN_CHUNK_CANDIDATES:
+            if c > max_t:
+                continue
+            s_c = sched if c == chunk else (ref if c == 64 else _fixed(c))
+            rows.append((f"search.scan.{key}.latency_ms_chunk{c}",
+                         s_c.cost["latency_s"] * 1e3,
+                         f"edp={s_c.cost['edp']:.4g}"))
+    return rows
+
+
 def _best_of(fn, reps: int = 2) -> Tuple[float, object]:
     """Min wall time over ``reps`` runs (the scheduler is deterministic;
     the box is not), plus the last result."""

@@ -37,7 +37,7 @@ def collect_rows() -> list:
     """All benchmark rows as (name, value, note) tuples."""
     from benchmarks.paper_figs import ALL
     from benchmarks.bench_kernels import bench_kernels
-    from benchmarks.dse import (bench_obs, bench_search,
+    from benchmarks.dse import (bench_obs, bench_scan, bench_search,
                                 bench_search_perf, bench_spatial)
     from benchmarks.serve import bench_serve
 
@@ -45,6 +45,7 @@ def collect_rows() -> list:
     sections = dict(ALL)
     sections["search(DSE)"] = bench_search
     sections["search(spatial)"] = bench_spatial
+    sections["search(scan)"] = bench_scan
     sections["search(perf)"] = bench_search_perf
     sections["search(obs)"] = bench_obs
     sections["search(serve)"] = bench_serve

@@ -33,8 +33,9 @@ from typing import Dict, List, Mapping, Optional, Tuple
 
 from repro.core import dataflow
 from repro.core.memory import MemoryHierarchy, MemoryLevel, paper_hierarchy
-from repro.core.workload import (ACT, ELEMWISE, MAC_OPS, NORM, SOFTMAX,
-                                 Layer)
+from repro.core.workload import (ACT, ELEMWISE, MAC_OPS, NORM, SCAN,
+                                 SOFTMAX, Layer, scan_macs,
+                                 scan_state_bytes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,6 +210,11 @@ class LayerCost:
     # bytes moved through each memory level's port, keyed by level name
     traffic: Dict[str, int] = dataclasses.field(default_factory=dict)
     fused: bool = False            # folded into producer (C2) / IBN (C3)
+    # MACs beyond Layer.macs actually executed by this schedule — the
+    # chunk-dependent intra-chunk work of a SCAN layer.  0 for every
+    # other op, keeping the energy rows bit-identical to the pre-scan
+    # cost model.
+    extra_macs: int = 0
 
     # back-compat views onto the default 3-level rows
     @property
@@ -231,7 +237,7 @@ class LayerCost:
 
     def energy_pj(self, hw: HWSpec) -> Dict[str, float]:
         out = {b: 0.0 for b in energy_buckets(hw)}
-        out["compute"] = self.layer.macs * hw.e_mac
+        out["compute"] = (self.layer.macs + self.extra_macs) * hw.e_mac
         for lvl in hw.hierarchy.levels:
             out[lvl.name] += self.traffic.get(lvl.name, 0) * lvl.pj_per_byte
         return out
@@ -263,7 +269,7 @@ class NetworkCost:
         tot: Dict[str, float] = {b: 0.0 for b in energy_buckets(hw)}
         compute = 0.0
         for lc in self.layers:
-            compute += lc.layer.macs * hw.e_mac
+            compute += (lc.layer.macs + lc.extra_macs) * hw.e_mac
             for k, v in lc.traffic.items():
                 tot[k] += v * pj_by[k]
         tot["compute"] = compute
@@ -423,6 +429,53 @@ def _nonlinear_layer_cost(layer: Layer, hw: HWSpec, fused: bool,
                      traffic=traffic)
 
 
+def scan_state_level(layer: Layer, hw: HWSpec) -> MemoryLevel:
+    """The memory level the [K, V] running state of a SCAN layer resides
+    at across chunk boundaries: the innermost level whose output-serving
+    partition holds one state instance (the state is accumulated like a
+    psum block, so output capacity is the right budget), falling back to
+    the backing store when nothing on chip fits."""
+    return hw.hierarchy.stationary_level("output", scan_state_bytes(layer))
+
+
+def _scan_layer_cost(layer: Layer, hw: HWSpec, mapping, chunk: int,
+                     extra_dram: int = 0, *,
+                     fixed_wiring: bool = False,
+                     cyc: Optional[int] = None) -> LayerCost:
+    """Chunked-recurrence layer cost at chunk length ``chunk``.
+
+    Compute: the four per-chunk GEMMs (``workload.scan_macs``) on the
+    spatially-unrolled array — the chunk-dependent score/intra MACs ride
+    in ``extra_macs`` so the energy rows price what actually executes.
+    Traffic: r/k/v/decay stream once and the output writes once at the
+    stream level; the [K, V] state crosses its residency level's port
+    twice per chunk per scan instance — the term that rewards large
+    chunks exactly as the C3 loop-reordering rewards fused tiles.
+    """
+    if cyc is None:
+        cyc = dataflow.cycles_scan(layer, mapping, hw.rows, hw.cols,
+                                   chunk=chunk, fixed_wiring=fixed_wiring)
+    label = dataflow.mapping_label(mapping) \
+        if not isinstance(mapping, str) else mapping
+    total_macs = scan_macs(layer, chunk)
+    rf = 4 * (total_macs // max(hw.cols, 1) + layer.output_elems)
+    state_bytes = scan_state_bytes(layer)
+    n_chunks = -(-layer.ox // chunk)
+    state_traffic = 2 * state_bytes * layer.b * n_chunks
+    lvl = scan_state_level(layer, hw)
+    dram = layer.weight_bytes + extra_dram
+    stall = max(0, _bus_cycles(dram, hw) - cyc)
+    traffic: Dict[str, int] = {}
+    _add(traffic, hw.hierarchy.innermost.name, rf)
+    _add(traffic, _stream_level(hw).name,
+         layer.input_bytes + layer.output_bytes + layer.weight_bytes)
+    _add(traffic, lvl.name, state_traffic)
+    _add(traffic, hw.hierarchy.outermost.name, dram)
+    return LayerCost(layer=layer, mapping=label, compute_cycles=cyc,
+                     stall_cycles=stall, traffic=traffic,
+                     extra_macs=total_macs - layer.macs)
+
+
 def cost_network(
     layers: List[Layer],
     hw: Optional[HWSpec] = None,
@@ -454,6 +507,12 @@ def cost_network(
             mapping = dataflow.select_mapping(l, reconfigurable=reconfigurable)
             out.append(_mac_layer_cost(l, hw, mapping,
                                        extra_dram=spills.get(l.name, 0)))
+        elif l.op == SCAN:
+            # the hand-coded baseline runs scans at the RWKV default
+            # chunk (64) with the state dims on the array — the fixed
+            # point the searched chunk must beat
+            out.append(_scan_layer_cost(l, hw, ("k", "c"), 64,
+                                        extra_dram=spills.get(l.name, 0)))
         else:
             out.append(_nonlinear_layer_cost(l, hw, fuse_nonlinear,
                                              extra_dram=spills.get(l.name,
@@ -501,6 +560,7 @@ def cost_network_scheduled(
     sram_overrides: Optional[Dict[str, int]] = None,
     placements: Optional[Dict[str, Mapping[str, str]]] = None,
     cycles: Optional[Dict[str, int]] = None,
+    scan_chunks: Optional[Dict[str, int]] = None,
     dedup: bool = True,
     cost_cache: Optional[Dict] = None,
 ) -> NetworkCost:
@@ -535,6 +595,11 @@ def cost_network_scheduled(
                         scheduler's spatial phase) — skips re-deriving
                         them; only consulted for layers with an explicit
                         mapping.
+      scan_chunks     : per-SCAN-layer searched chunk length (the
+                        schedule's tiles entries carry it) — scans cost
+                        through ``_scan_layer_cost`` at exactly that
+                        chunk; a scan without an entry runs at the
+                        fixed default chunk 64.
       dedup           : repeated layer shapes cost identically under
                         identical decisions — derive once per content
                         key and restamp per repeat (``dedup=False`` is
@@ -589,6 +654,32 @@ def cost_network_scheduled(
                                compute_cycles=prev.compute_cycles,
                                stall_cycles=prev.stall_cycles,
                                traffic=dict(prev.traffic))
+            out.append(lc)
+        elif l.op == SCAN:
+            chunk = (scan_chunks or {}).get(l.name, 64)
+            mapping = mappings.get(l.name, ("k", "c"))
+            cyc = cycles.get(l.name) if cycles is not None else None
+            ed = spills.get(l.name, 0)
+            if seen is None:
+                out.append(_scan_layer_cost(l, hw, mapping, chunk,
+                                            extra_dram=ed,
+                                            fixed_wiring=fixed_wiring,
+                                            cyc=cyc))
+                continue
+            key = (l.signature, hw.signature, "scan", mapping, chunk,
+                   ed, fixed_wiring, cyc)
+            prev = seen.get(key)
+            if prev is None:
+                lc = _scan_layer_cost(l, hw, mapping, chunk,
+                                      extra_dram=ed,
+                                      fixed_wiring=fixed_wiring, cyc=cyc)
+                seen[key] = lc
+            else:
+                lc = LayerCost(layer=l, mapping=prev.mapping,
+                               compute_cycles=prev.compute_cycles,
+                               stall_cycles=prev.stall_cycles,
+                               traffic=dict(prev.traffic),
+                               extra_macs=prev.extra_macs)
             out.append(lc)
         else:
             out.append(_nonlinear_layer_cost(

@@ -34,7 +34,7 @@ import math
 from typing import Dict, Literal, Optional, Tuple, Union
 
 from repro.core.workload import (ACT, CONV, DWCONV, ELEMWISE, MAC_OPS,
-                                 MATMUL, NORM, PWCONV, SOFTMAX, Layer)
+                                 MATMUL, NORM, PWCONV, SCAN, SOFTMAX, Layer)
 
 Mapping = Literal["OXC", "CK", "CFX"]
 # generalized spatial mapping: (row_dim, col_dim) — any ordered pair of
@@ -73,7 +73,10 @@ def dim_sizes(layer: Layer) -> Dict[str, int]:
 def reduction_dims(layer: Layer) -> Tuple[str, ...]:
     """Dims whose spatial unrolling needs an accumulation path (adder
     tree / neighbor propagation).  Depthwise: C indexes groups, not a
-    reduction — only the kernel window reduces."""
+    reduction — only the kernel window reduces.  Scan: only the state
+    key dim reduces (the sequence dim is a carry, never spatial)."""
+    if layer.op == SCAN:
+        return ("c",)
     return ("fx", "fy") if layer.op == DWCONV else ("c", "fx", "fy")
 
 
@@ -195,6 +198,70 @@ def cycles_factored(layer: Layer, mapping: FactoredMapping,
         u = unroll.get(d, 1)
         total *= _ceil(s, u) if u > 1 else s
     return total
+
+
+def _scan_unroll(layer: Layer, mapping: AnyMapping, rows: int, cols: int,
+                 *, fixed_wiring: bool = False) -> Dict[str, int]:
+    """Per-dim spatial unroll factors of a scan mapping.  Only b / k / c
+    may be unrolled — the sequence dim carries the state and must run
+    temporally in chunk order."""
+    unroll: Dict[str, int] = {}
+    axes = mapping if is_factored(mapping) else \
+        (((mapping[0], rows),), ((mapping[1], cols),))
+    red = reduction_dims(layer)
+    for ci, axis in enumerate(axes):
+        for d, f in axis:
+            if d in ("ox", "oy", "fx", "fy"):
+                raise ValueError(
+                    f"scan carry/window dim {d!r} cannot be spatial")
+            if fixed_wiring and ci == 1 and d not in red:
+                continue                       # void column segment
+            unroll[d] = unroll.get(d, 1) * f
+    return unroll
+
+
+def cycles_scan(layer: Layer, mapping: AnyMapping, rows: int = 16,
+                cols: int = 16, *, chunk: int,
+                fixed_wiring: bool = False) -> int:
+    """Temporal steps of a SCAN layer executed chunk-by-chunk.
+
+    The sequence dim runs temporally in chunks of ``chunk`` tokens (the
+    state carry forbids splitting or reordering it); b / k / c unroll
+    spatially per ``mapping``.  Per chunk the four GEMMs of
+    ``workload.scan_macs`` run on the array — the [C, C] score and
+    intra products put the chunk length on both GEMM sides, so cycles
+    grow with the chunk while the chunk count shrinks.  A ragged final
+    chunk (T % chunk) is charged its true shorter extent.
+    """
+    if layer.op != SCAN:
+        raise ValueError(f"cycles_scan on {layer.op!r}")
+    if chunk < 1:
+        raise ValueError(f"bad chunk {chunk}")
+    unroll = _scan_unroll(layer, mapping, rows, cols,
+                          fixed_wiring=fixed_wiring)
+    f_b = min(unroll.get("b", 1), layer.b)
+    f_k = min(unroll.get("k", 1), layer.k)
+    f_c = min(unroll.get("c", 1), layer.c)
+    tk = _ceil(layer.k, f_k)
+    tc = _ceil(layer.c, f_c)
+
+    def per_chunk(ct: int) -> int:
+        return ct * ct * tc + ct * ct * tk + ct * tk * tc + tc * tk * ct
+
+    nfull, rem = divmod(layer.ox, chunk)
+    total = nfull * per_chunk(chunk) + (per_chunk(rem) if rem else 0)
+    return _ceil(layer.b, f_b) * total
+
+
+def scan_utilization(layer: Layer, mapping: AnyMapping, rows: int = 16,
+                     cols: int = 16, *, chunk: int,
+                     fixed_wiring: bool = False) -> float:
+    from repro.core.workload import scan_macs
+    cyc = cycles_scan(layer, mapping, rows, cols, chunk=chunk,
+                      fixed_wiring=fixed_wiring)
+    if cyc == 0:
+        return 0.0
+    return scan_macs(layer, chunk) / (cyc * rows * cols)
 
 
 def cycles(layer: Layer, mapping: AnyMapping, rows: int = 16,

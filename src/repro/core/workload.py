@@ -28,8 +28,18 @@ NORM = "norm"          # LayerNorm (channel-dim statistics)
 SOFTMAX = "softmax"
 ACT = "act"            # GELU etc.
 ELEMWISE = "elemwise"  # residual add / scale
+SCAN = "scan"          # chunked recurrence (WKV / RG-LRU state scan)
 
 MAC_OPS = (CONV, DWCONV, PWCONV, MATMUL)
+
+# SCAN is deliberately NOT in MAC_OPS: it is compute-bearing but its
+# sequence dim (ox) carries a sequential state dependency, so every
+# MAC-generic code path (spatial split of any dim, free temporal
+# reordering, MAC-chain tiling) would be illegal for it.  Dim roles:
+#   b  = batch x heads     ox = sequence length T (the carry dim)
+#   c  = state key dim K   k  = state value dim V      oy=fx=fy=1
+# The [K, V] running state carries across chunks of ``ox``; the chunk
+# length is a schedule decision (see search.auto), not a layer dim.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +72,12 @@ class Layer:
 
     @property
     def macs(self) -> int:
+        if self.op == SCAN:
+            # chunk-independent floor: per token, one [K]x[K,V] state
+            # read-out plus one [K]x[V] outer-product state update.
+            # The intra-chunk [C, C] score matrix depends on the
+            # searched chunk length — see ``scan_macs``.
+            return 2 * self.b * self.ox * self.c * self.k
         if self.op not in MAC_OPS:
             return 0
         return (self.b * self.k * self.c * self.ox * self.oy
@@ -69,6 +85,9 @@ class Layer:
 
     @property
     def input_elems(self) -> int:
+        if self.op == SCAN:
+            # r, k, decay each [T, K] plus v [T, V], per b instance
+            return self.b * self.ox * (3 * self.c + self.k)
         if self.op == DWCONV:
             return self.b * self.c * (self.ox + self.fx - 1) * \
                 (self.oy + self.fy - 1)
@@ -79,6 +98,8 @@ class Layer:
 
     @property
     def output_elems(self) -> int:
+        if self.op == SCAN:
+            return self.b * self.ox * self.k
         if self.op not in MAC_OPS:          # norm/act/elemwise: same shape
             return self.input_elems
         k = self.k if self.op != DWCONV else self.c
@@ -90,6 +111,8 @@ class Layer:
             return self.c * self.fx * self.fy
         if self.op in (CONV, PWCONV, MATMUL):
             return self.k * self.c * self.fx * self.fy
+        if self.op == SCAN:
+            return self.b * self.c        # per-head bonus vector u [K]
         return 0
 
     @property
@@ -229,6 +252,34 @@ def edgenext_serving_workload(batch: int = 4,
     """
     from repro.configs.edgenext_s import CONFIG
     return edgenext_workload(cfg or CONFIG, batch=batch)
+
+
+# ---------------------------------------------------------------------------
+# SCAN (chunked recurrence) helpers
+# ---------------------------------------------------------------------------
+
+
+def scan_macs(layer: Layer, chunk: int) -> int:
+    """Total MACs of a SCAN layer executed at chunk length ``chunk``.
+
+    Per chunk of C tokens (the intra/inter split of
+    ``kernels/rwkv_chunk.wkv_chunked``):
+      inter  = r_dec [C,K] @ state [K,V]        -> C*K*V
+      score  = r [C,K] @ k_dec^T [K,C]          -> C*C*K   (the [C,C] matrix)
+      intra  = A [C,C] @ v [C,V]                -> C*C*V
+      update = k_dec^T [K,C] @ v [C,V]          -> K*C*V
+    Summed over T/C chunks the inter+update terms are chunk-independent
+    (= ``Layer.macs``); the score+intra terms grow linearly with C.
+    """
+    l = layer
+    return l.b * (2 * l.ox * l.c * l.k + l.ox * chunk * (l.c + l.k))
+
+
+def scan_state_bytes(layer: Layer) -> int:
+    """Bytes of the fp32 [K, V] running state one scan instance carries
+    across chunk boundaries — the residency operand the hierarchy must
+    hold for the whole sequence sweep."""
+    return 4 * layer.c * layer.k
 
 
 # ---------------------------------------------------------------------------
@@ -551,6 +602,125 @@ def mobilevit_serving_workload(batch: int = 4) -> List[Layer]:
     the imperfect-factor tiler honest), the second DSE serving point
     next to ``edgenext_serving_workload``."""
     return mobilevit_workload(batch=batch)
+
+
+# ---------------------------------------------------------------------------
+# Chunked-recurrence workloads (SCAN op class)
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_workload(*, seq: int = 512, n_layers: int = 24, dim: int = 2048,
+                   heads: int = 32, head_dim: int = 64, ff: int = 7168,
+                   batch: int = 1) -> List[Layer]:
+    """RWKV6-1.6B-style blocks (configs/rwkv6_1_6b.py dims) at a prefill
+    sequence length.
+
+    Each block: time-mix (fused r/k/v/g projections, the WKV chunked
+    scan over ``heads`` independent [K, V] states, group-norm, output
+    projection) then channel-mix as a squared-ReLU inverted bottleneck.
+    The decay LoRA (d -> 64 -> d) is folded into the projection GEMM;
+    the LM head is omitted — it is one dense GEMM the vision registry
+    already covers, and it would drown the scan layers in the EDP.
+    """
+    layers: List[Layer] = []
+    t = seq
+    for bi in range(n_layers):
+        p = f"blk{bi}"
+        layers.append(Layer(f"{p}.ln1", NORM, b=batch, c=dim, ox=t))
+        layers.append(Layer(f"{p}.tmix.rkvg", PWCONV, b=batch, k=4 * dim,
+                            c=dim, ox=t))
+        layers.append(Layer(f"{p}.tmix.wkv", SCAN, b=batch * heads, ox=t,
+                            c=head_dim, k=head_dim))
+        layers.append(Layer(f"{p}.tmix.gn", NORM, b=batch, c=dim, ox=t))
+        layers.append(Layer(f"{p}.tmix.out", PWCONV, b=batch, k=dim, c=dim,
+                            ox=t))
+        layers.append(Layer(f"{p}.res1", ELEMWISE, b=batch, c=dim, ox=t))
+        layers.append(Layer(f"{p}.ln2", NORM, b=batch, c=dim, ox=t))
+        layers.append(Layer(f"{p}.cmix.key", PWCONV, b=batch, k=ff, c=dim,
+                            ox=t, ibn_role="expand", ibn_id=3000 + bi))
+        layers.append(Layer(f"{p}.cmix.act", ACT, b=batch, c=ff, ox=t,
+                            ibn_role="act", ibn_id=3000 + bi))
+        layers.append(Layer(f"{p}.cmix.value", PWCONV, b=batch, k=dim,
+                            c=ff, ox=t, ibn_role="project",
+                            ibn_id=3000 + bi))
+        layers.append(Layer(f"{p}.res2", ELEMWISE, b=batch, c=dim, ox=t))
+    layers.append(Layer("head.ln", NORM, b=batch, c=dim, ox=t))
+    return layers
+
+
+def recurrentgemma_workload(*, seq: int = 448, n_layers: int = 26,
+                            dim: int = 2560, heads: int = 10,
+                            head_dim: int = 256, ff: int = 7680,
+                            lru_width: int = 2560, conv1d_width: int = 4,
+                            batch: int = 1) -> List[Layer]:
+    """RecurrentGemma-2B-style blocks (configs/recurrentgemma_2b.py dims)
+    with the (recurrent, recurrent, attention) pattern.
+
+    Recurrent blocks: GeGLU-style dual linear branch, causal width-4
+    conv1d over the sequence (a 1-D DWCONV), block-diagonal gate GEMMs,
+    and the RG-LRU as a degenerate SCAN with a [1, lru_width] state —
+    elementwise diagonal recurrence, so the intra-chunk score matrix is
+    pure chunking overhead and the search should pick a small chunk.
+    Attention blocks are MQA (kv_heads=1) at full head_dim=256.  Every
+    block ends in a GeGLU MLP; the LM head is omitted (see
+    ``rwkv6_workload``).  ``seq=448`` leaves a ragged final chunk at
+    chunk lengths >= 128 (448 % 128 == 64).
+    """
+    layers: List[Layer] = []
+    t = seq
+    h_lru = lru_width // heads
+
+    def mlp(p: str, bi: int):
+        layers.append(Layer(f"{p}.ln2", NORM, b=batch, c=dim, ox=t))
+        layers.append(Layer(f"{p}.ff_gate", PWCONV, b=batch, k=ff, c=dim,
+                            ox=t))
+        layers.append(Layer(f"{p}.ff_up", PWCONV, b=batch, k=ff, c=dim,
+                            ox=t, ibn_role="expand", ibn_id=4000 + bi))
+        layers.append(Layer(f"{p}.ff_act", ACT, b=batch, c=ff, ox=t,
+                            ibn_role="act", ibn_id=4000 + bi))
+        layers.append(Layer(f"{p}.ff_down", PWCONV, b=batch, k=dim, c=ff,
+                            ox=t, ibn_role="project", ibn_id=4000 + bi))
+        layers.append(Layer(f"{p}.res2", ELEMWISE, b=batch, c=dim, ox=t))
+
+    pattern = ("recurrent", "recurrent", "attention")
+    for bi in range(n_layers):
+        p = f"blk{bi}"
+        kind = pattern[bi % len(pattern)]
+        layers.append(Layer(f"{p}.ln1", NORM, b=batch, c=dim, ox=t))
+        if kind == "recurrent":
+            layers.append(Layer(f"{p}.linx", PWCONV, b=batch, k=lru_width,
+                                c=dim, ox=t))
+            layers.append(Layer(f"{p}.liny", PWCONV, b=batch, k=lru_width,
+                                c=dim, ox=t))
+            layers.append(Layer(f"{p}.ygelu", ACT, b=batch, c=lru_width,
+                                ox=t))
+            layers.append(Layer(f"{p}.conv1d", DWCONV, b=batch,
+                                c=lru_width, ox=t, fx=conv1d_width))
+            layers.append(Layer(f"{p}.gates", MATMUL, b=batch * heads,
+                                k=2 * h_lru, c=h_lru, ox=t))
+            layers.append(Layer(f"{p}.lru", SCAN, b=batch, ox=t, c=1,
+                                k=lru_width))
+            layers.append(Layer(f"{p}.gate_mul", ELEMWISE, b=batch,
+                                c=lru_width, ox=t))
+            layers.append(Layer(f"{p}.out", PWCONV, b=batch, k=dim,
+                                c=lru_width, ox=t))
+        else:
+            layers.append(Layer(f"{p}.q", PWCONV, b=batch,
+                                k=heads * head_dim, c=dim, ox=t))
+            layers.append(Layer(f"{p}.kv", PWCONV, b=batch,
+                                k=2 * head_dim, c=dim, ox=t))
+            layers.append(Layer(f"{p}.qk", MATMUL, b=batch * heads, k=t,
+                                c=head_dim, ox=t))
+            layers.append(Layer(f"{p}.sm", SOFTMAX, b=batch * heads, c=t,
+                                ox=t))
+            layers.append(Layer(f"{p}.av", MATMUL, b=batch * heads,
+                                k=head_dim, c=t, ox=t))
+            layers.append(Layer(f"{p}.proj", PWCONV, b=batch, k=dim,
+                                c=heads * head_dim, ox=t))
+        layers.append(Layer(f"{p}.res1", ELEMWISE, b=batch, c=dim, ox=t))
+        mlp(p, bi)
+    layers.append(Layer("head.ln", NORM, b=batch, c=dim, ox=t))
+    return layers
 
 
 def total_macs(layers: List[Layer]) -> int:

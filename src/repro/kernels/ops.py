@@ -112,9 +112,9 @@ def depthwise_conv2d(x: jax.Array, w: jax.Array, b: jax.Array, *,
 def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
                 u: jax.Array, *, chunk: int = 64,
                 interpret: Optional[bool] = None):
+    """Chunked WKV at any T: the kernel pads T to a chunk multiple and
+    masks the ragged tail in-kernel, so the requested chunk is honored
+    verbatim (it is the searched schedule parameter, never shrunk)."""
     interp = (not _on_tpu()) if interpret is None else interpret
-    T = r.shape[1]
-    c = min(chunk, T)
-    while T % c:
-        c //= 2
-    return _wkv.wkv_chunked(r, k, v, logw, u, chunk=c, interpret=interp)
+    return _wkv.wkv_chunked(r, k, v, logw, u, chunk=chunk,
+                            interpret=interp)

@@ -29,7 +29,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref,
-                state_ref, *, n_chunks: int, C: int):
+                state_ref, *, n_chunks: int, C: int, valid_t: int):
     c = pl.program_id(1)
 
     @pl.when(c == 0)
@@ -41,6 +41,17 @@ def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_out_ref,
     vc = v_ref[0].astype(jnp.float32)              # [C, V]
     wc = w_ref[0].astype(jnp.float32)              # [C, K] log-decay <= 0
     u = u_ref[0].astype(jnp.float32)               # [K]
+
+    if valid_t % C:
+        # ragged T: zero the padded tail of the final chunk so it is
+        # recurrence-neutral (logw=0 -> decay 1, k=0 -> no state/score
+        # contribution, r=0 -> dead output rows).  Static short-circuit:
+        # dividing extents compile exactly as before.
+        tok = c * C + jax.lax.broadcasted_iota(jnp.int32, (C, 1), 0)
+        live = tok < valid_t
+        rc = jnp.where(live, rc, 0.0)
+        kc = jnp.where(live, kc, 0.0)
+        wc = jnp.where(live, wc, 0.0)
 
     b = jnp.cumsum(wc, axis=0)                     # [C, K]
     b_prev = b - wc
@@ -80,16 +91,24 @@ def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
     """r,k,logw: [BH, T, K]; v: [BH, T, V]; u: [BH, K].
 
     Returns (out [BH, T, V] in r.dtype, final_state [BH, K, V] f32).
-    T must divide by ``chunk``.
+    T need not divide by ``chunk``: the operands are padded to the next
+    chunk multiple and the kernel masks the padded tail of the final
+    chunk in-kernel (true ``valid_t`` extent), so results are identical
+    to the sequential reference at any ragged T.
     """
     BH, T, K = r.shape
     V = v.shape[-1]
     C = min(chunk, T)
-    assert T % C == 0, (T, C)
-    n_chunks = T // C
+    n_chunks = -(-T // C)
+    Tp = n_chunks * C
+    if Tp != T:
+        def _pad(x):
+            return jnp.pad(x, ((0, 0), (0, Tp - T), (0, 0)))
+        r, k, v, logw = _pad(r), _pad(k), _pad(v), _pad(logw)
 
     out, state = pl.pallas_call(
-        functools.partial(_wkv_kernel, n_chunks=n_chunks, C=C),
+        functools.partial(_wkv_kernel, n_chunks=n_chunks, C=C,
+                          valid_t=T),
         grid=(BH, n_chunks),
         in_specs=[
             pl.BlockSpec((1, C, K), lambda bh, c: (bh, c, 0)),
@@ -103,10 +122,10 @@ def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
             pl.BlockSpec((1, K, V), lambda bh, c: (bh, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((BH, T, V), r.dtype),
+            jax.ShapeDtypeStruct((BH, Tp, V), r.dtype),
             jax.ShapeDtypeStruct((BH, K, V), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
         interpret=interpret,
     )(r, k, v, logw, u)
-    return out, state
+    return out[:, :T], state

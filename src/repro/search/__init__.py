@@ -50,7 +50,9 @@ def get_workload(name: str):
     from repro.core.workload import (edgenext_workload,
                                      efficientvit_workload,
                                      fastvit_workload, mobilevit_workload,
-                                     vit_workload, with_batch)
+                                     recurrentgemma_workload,
+                                     rwkv6_workload, vit_workload,
+                                     with_batch)
     builders = {
         "edgenext-s": lambda: edgenext_workload(CONFIG),
         "edgenext-reduced": lambda: edgenext_workload(reduced_edgenext()),
@@ -58,6 +60,8 @@ def get_workload(name: str):
         "efficientvit-b0": lambda: efficientvit_workload(),
         "mobilevit-s": lambda: mobilevit_workload(),
         "fastvit-s": lambda: fastvit_workload(),
+        "rwkv6": lambda: rwkv6_workload(),
+        "recurrentgemma": lambda: recurrentgemma_workload(),
     }
     base, batch = parse_workload(name)
     if base not in builders:
@@ -83,4 +87,4 @@ def parse_workload(name: str) -> tuple:
 
 WORKLOADS = ("edgenext-s", "edgenext-s-b4", "edgenext-reduced", "vit-tiny",
              "efficientvit-b0", "mobilevit-s", "mobilevit-s-b4",
-             "fastvit-s", "fastvit-s-b4")
+             "fastvit-s", "fastvit-s-b4", "rwkv6", "recurrentgemma")

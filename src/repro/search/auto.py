@@ -21,10 +21,11 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro import obs
-from repro.core.costmodel import (HWSpec, NetworkCost,
+from repro.core.costmodel import (HWSpec, NetworkCost, _scan_layer_cost,
                                   cost_network_scheduled,
-                                  group_sram_overrides)
-from repro.core.workload import MAC_OPS, NORM, SOFTMAX, Layer
+                                  group_sram_overrides, scan_state_level)
+from repro.core.workload import (MAC_OPS, NORM, SCAN, SOFTMAX, Layer,
+                                 scan_state_bytes)
 from repro.search import cache as cache_mod
 from repro.search import lower as lower_mod
 from repro.search import mapper, partition, tiler
@@ -100,6 +101,10 @@ def evaluate_schedule(layers: List[Layer], schedule: Schedule,
     hw = hw or HWSpec()
     overrides = group_sram_overrides(layers, schedule.groups,
                                      schedule.tiles) if tile_aware else None
+    # a SCAN layer's tiles entry records the searched chunk length — the
+    # evaluation must price the scan at exactly that chunk
+    scan_chunks = {name: int(t["chunk"])
+                   for name, t in schedule.tiles.items() if "chunk" in t}
     return cost_network_scheduled(
         layers, hw,
         mappings={k: dataflow.as_mapping(v)
@@ -109,7 +114,8 @@ def evaluate_schedule(layers: List[Layer], schedule: Schedule,
         fixed_wiring=schedule.fixed_wiring,
         sram_overrides=overrides,
         placements=schedule.placements,
-        cycles=cycles, dedup=dedup, cost_cache=cost_cache)
+        cycles=cycles, scan_chunks=scan_chunks or None,
+        dedup=dedup, cost_cache=cost_cache)
 
 
 def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
@@ -158,12 +164,105 @@ def auto_schedule(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                               memo=memo, perf=perf)
 
 
+SCAN_CHUNK_DEFAULT = 64            # the RWKV kernel's fixed baseline
+_SCAN_CHUNK_CANDIDATES = (8, 16, 32, 64, 128, 256)
+
+
+def _scan_chunk_menu(scan_layers: List[Layer]) -> List[int]:
+    t_max = max(l.ox for l in scan_layers)
+    return sorted({c for c in _SCAN_CHUNK_CANDIDATES if c <= t_max}
+                  | {SCAN_CHUNK_DEFAULT})
+
+
+def _scan_swap_terms(scan_layers: List[Layer], hw: HWSpec, chunk: int, *,
+                     spatial_mode: str, fixed_wiring: bool,
+                     memo) -> Tuple[int, float]:
+    """(cycles, non-static pJ) all scan layers contribute at ``chunk``
+    under their best mappings — the terms the analytic chunk selection
+    swaps in and out of the reference network totals."""
+    cyc_tot, pj_tot = 0, 0.0
+    for l in scan_layers:
+        mc = mapper.best_scan_mapping(l, hw.rows, hw.cols, chunk=chunk,
+                                      spatial_mode=spatial_mode,
+                                      fixed_wiring=fixed_wiring,
+                                      memo=memo)
+        lc = _scan_layer_cost(l, hw, mc.mapping, chunk,
+                              fixed_wiring=fixed_wiring, cyc=mc.cycles)
+        cyc_tot += lc.total_cycles
+        pj_tot += sum(lc.energy_pj(hw).values())
+    return cyc_tot, pj_tot
+
+
+def _best_scan_chunk(layers: List[Layer], ref: Schedule, hw: HWSpec, *,
+                     spatial_mode: str, fixed_wiring: bool,
+                     memo) -> int:
+    """Network-EDP argmin over the chunk menu, by analytically swapping
+    the scan layers' (cycles, energy) at each candidate into the
+    reference (chunk=64) totals.  Exact up to float re-association: the
+    partition structure is chunk-independent (the state bytes gating
+    fusion legality are chunk-free, and a scan never co-tiles with
+    other compute), so only the scan layers' own terms move — the
+    winner is re-searched end to end and compared exactly afterwards.
+    """
+    scan_layers = [l for l in layers if l.op == SCAN]
+    ref_cyc, ref_pj = _scan_swap_terms(scan_layers, hw,
+                                       SCAN_CHUNK_DEFAULT,
+                                       spatial_mode=spatial_mode,
+                                       fixed_wiring=fixed_wiring,
+                                       memo=memo)
+    base_cycles = ref.cost["latency_s"] * hw.clock_hz - ref_cyc
+    static_pj_s = hw.static_mw * 1e-3 * 1e12       # pJ per second
+    base_pj = (ref.cost["energy_j"] * 1e12
+               - static_pj_s * ref.cost["latency_s"] - ref_pj)
+    best_chunk, best_edp = SCAN_CHUNK_DEFAULT, None
+    for chunk in _scan_chunk_menu(scan_layers):
+        cyc, pj = _scan_swap_terms(scan_layers, hw, chunk,
+                                   spatial_mode=spatial_mode,
+                                   fixed_wiring=fixed_wiring, memo=memo)
+        lat = (base_cycles + cyc) / hw.clock_hz
+        en = (base_pj + pj + static_pj_s * lat) * 1e-12
+        edp = en * lat
+        if best_edp is None or edp < best_edp or \
+                (edp == best_edp and chunk == SCAN_CHUNK_DEFAULT):
+            best_chunk, best_edp = chunk, edp
+    obs.event("auto.scan_chunk", chunk=best_chunk,
+              menu=_scan_chunk_menu(scan_layers))
+    return best_chunk
+
+
 def _auto_schedule(layers: List[Layer], hw: Optional[HWSpec], *,
                    workload: str, reconfigurable: bool, tile_mode: str,
                    spatial_mode: str, dedup: bool,
                    memo: Optional["SearchMemo"],
-                   perf: Optional[PerfRecorder]) -> Schedule:
+                   perf: Optional[PerfRecorder],
+                   scan_chunk: Optional[int] = None) -> Schedule:
     hw = hw or HWSpec()
+    scan_layers = [l for l in layers if l.op == SCAN]
+    if scan_layers and scan_chunk is None:
+        # two-pass network-level chunk selection: search at the fixed
+        # baseline chunk, analytically rank the menu, re-search the
+        # winner, and keep whichever full evaluation is actually best —
+        # the searched schedule is ≤ the chunk=64 baseline by
+        # construction
+        ref = _auto_schedule(layers, hw, workload=workload,
+                             reconfigurable=reconfigurable,
+                             tile_mode=tile_mode,
+                             spatial_mode=spatial_mode, dedup=dedup,
+                             memo=memo, perf=perf,
+                             scan_chunk=SCAN_CHUNK_DEFAULT)
+        pick_memo = memo if dedup else None
+        best = _best_scan_chunk(layers, ref, hw,
+                                spatial_mode=spatial_mode,
+                                fixed_wiring=not reconfigurable,
+                                memo=pick_memo)
+        if best == SCAN_CHUNK_DEFAULT:
+            return ref
+        won = _auto_schedule(layers, hw, workload=workload,
+                             reconfigurable=reconfigurable,
+                             tile_mode=tile_mode,
+                             spatial_mode=spatial_mode, dedup=dedup,
+                             memo=memo, perf=perf, scan_chunk=best)
+        return won if won.cost["edp"] <= ref.cost["edp"] else ref
     if not dedup and memo is not None:
         raise ValueError("dedup=False is the brute-force equivalence "
                          "mode — a memo would partially accelerate the "
@@ -186,6 +285,16 @@ def _auto_schedule(layers: List[Layer], hw: Optional[HWSpec], *,
         fixed = None if reconfigurable else \
             mapper.best_fixed_mapping(layers, hw.rows, hw.cols)
         for l in layers:
+            if l.op == SCAN:
+                mc = mapper.best_scan_mapping(
+                    l, hw.rows, hw.cols, chunk=scan_chunk,
+                    fixed_wiring=not reconfigurable,
+                    spatial_mode=spatial_mode, memo=memo)
+                mappings[l.name] = mc.mapping
+                cycles_by_name[l.name] = mc.cycles
+                util_sum += mc.utilization
+                util_n += 1
+                continue
             if l.op not in MAC_OPS:
                 continue
             if fixed is not None:
@@ -204,9 +313,13 @@ def _auto_schedule(layers: List[Layer], hw: Optional[HWSpec], *,
             util_n += 1
 
     # 2. fusion partition (DP)
+    scan_chunks = {l.name: scan_chunk for l in scan_layers} \
+        if scan_layers else None
     with perf.phase("partition"):
         part = partition.partition_chain(layers, cycles_by_name, hw,
-                                         tile_mode=tile_mode, memo=memo)
+                                         tile_mode=tile_mode,
+                                         scan_chunks=scan_chunks,
+                                         memo=memo)
 
     # 3. tiles + group summaries
     with obs.span("tiles", groups=len(part.groups)):
@@ -215,6 +328,15 @@ def _auto_schedule(layers: List[Layer], hw: Optional[HWSpec], *,
         for g in part.groups:
             sl = layers[g.start:g.end]
             group_names.append(tuple(l.name for l in sl))
+            for l in sl:
+                if l.op == SCAN:
+                    # the searched chunk is the scan's "tile": recorded
+                    # here (not as a Schedule field) so the cache format
+                    # and evaluation replay carry it unchanged
+                    tiles[l.name] = {
+                        "chunk": scan_chunk,
+                        "state_bytes": scan_state_bytes(l),
+                        "level": scan_state_level(l, hw).name}
             macs = [l for l in sl if l.op in MAC_OPS]
             if g.tile is not None and macs:
                 tiles[macs[0].name] = {
@@ -246,6 +368,12 @@ def _auto_schedule(layers: List[Layer], hw: Optional[HWSpec], *,
                       and last_mac is not None):
                     needs_pixelwise[last_mac.name] = True
             for l in sl:
+                if l.op == SCAN:
+                    # the chunk loop's order is forced by the carry; the
+                    # one placement decision is where the state resides
+                    placements[l.name] = {
+                        "state": scan_state_level(l, hw).name}
+                    continue
                 if l.op not in MAC_OPS:
                     continue
                 t = mapper.best_temporal(

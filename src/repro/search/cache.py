@@ -44,7 +44,11 @@ from repro.core.workload import Layer
 # v5: factored spatial mappings with row/col replication (mappings may
 #     carry the per-axis ((dim, factor), ...) form); ``spatial_mode``
 #     is a search dimension hashed into the key
-SEARCH_VERSION = 5
+# v6: chunked-recurrence (SCAN) op class — scan layers carry a searched
+#     chunk length + state residence level in ``tiles`` and a state
+#     placement entry, and the fusion DP prices carry-state traffic;
+#     schedules for scan-free workloads change only in this version tag
+SEARCH_VERSION = 6
 
 
 def schedule_key(layers: List[Layer], hw: HWSpec,

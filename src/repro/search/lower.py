@@ -25,8 +25,8 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro import obs
-from repro.core.workload import (MAC_OPS, MATMUL, NORM, PWCONV, SOFTMAX,
-                                 Layer)
+from repro.core.workload import (MAC_OPS, MATMUL, NORM, PWCONV, SCAN,
+                                 SOFTMAX, Layer)
 from repro.search import tiler
 
 # VMEM is ~16 MB/core; keep resident blocks far below it and aligned to
@@ -63,7 +63,7 @@ def _snap(v: int, lo: int, hi: int, extent: int) -> Tuple[int, int]:
 
 @dataclasses.dataclass(frozen=True)
 class LoweredKernel:
-    kernel: str                    # "fused_ibn" | "matmul_ln" | "flash_attention"
+    kernel: str     # "fused_ibn" | "matmul_ln" | "flash_attention" | "rwkv_chunk"
     layer_names: Tuple[str, ...]
     params: Dict[str, int]
     # per-axis ragged final-block sizes (0 = the block divides the
@@ -136,6 +136,22 @@ def lower_attention(qk: Layer, *, tile_x: int,
                          {"q": rq, "k": rk})
 
 
+def lower_scan(scan: Layer, tinfo: Dict[str, int]) -> LoweredKernel:
+    """Chunked-recurrence layer -> rwkv_chunk(chunk): the searched chunk
+    length IS the kernel's sequence block.  Unlike the GEMM kernels the
+    chunk is not re-snapped here — the search already restricted itself
+    to the pow2 chunk menu, and the carry makes the grid order
+    non-negotiable (chunks run sequentially).  A non-dividing final
+    chunk is reported via ``ragged["t"]``; the ops wrapper pads T and
+    the kernel masks the padded tail in-kernel."""
+    chunk = max(1, min(int(tinfo.get("chunk") or 64), scan.ox))
+    ragged = {"t": scan.ox % chunk} if scan.ox % chunk else {}
+    return LoweredKernel("rwkv_chunk", (scan.name,),
+                         {"chunk": chunk, "bh": scan.b, "t": scan.ox,
+                          "k": scan.c, "v": scan.k},
+                         ragged)
+
+
 def lower_schedule(layers: Sequence[Layer], groups, tiles: Dict[str, dict],
                    *, local_buffer: int,
                    level_budgets: Optional[Dict[str, int]] = None
@@ -155,6 +171,10 @@ def lower_schedule(layers: Sequence[Layer], groups, tiles: Dict[str, dict],
     groups = list(groups)
     for g in groups:
         sl = layers[g.start:g.end]
+        scan = next((l for l in sl if l.op == SCAN), None)
+        if scan is not None:
+            out.append(lower_scan(scan, tiles.get(scan.name, {})))
+            continue
         macs = [l for l in sl if l.op in MAC_OPS]
         names = {l.name for l in sl}
         head = macs[0].name if macs else None

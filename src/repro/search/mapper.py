@@ -269,6 +269,87 @@ def best_mapping(layer: Layer, rows: int = 16, cols: int = 16, *,
     return best
 
 
+SCAN_SPATIAL_DIMS = ("b", "k", "c")
+
+
+def enumerate_scan_mappings(layer: Layer) -> Iterator[GenericMapping]:
+    """Ordered dim pairs for a SCAN layer.  Only b / k / c are ever
+    offered: the sequence dim carries the [K, V] state chunk to chunk,
+    so spatially splitting (or reordering) it would race the carry —
+    the invariant the scan property tests pin."""
+    sizes = dataflow.dim_sizes(layer)
+    useful = [d for d in SCAN_SPATIAL_DIMS if sizes[d] > 1]
+    if len(useful) >= 2:
+        yield from itertools.permutations(useful, 2)
+        return
+    if not useful:
+        yield from itertools.permutations(SCAN_SPATIAL_DIMS[:2])
+        return
+    partner = next(d for d in SCAN_SPATIAL_DIMS if d != useful[0])
+    yield from itertools.permutations((useful[0], partner))
+
+
+def best_scan_mapping(layer: Layer, rows: int = 16, cols: int = 16, *,
+                      chunk: int, fixed_wiring: bool = False,
+                      spatial_mode: str = "factored",
+                      memo=None) -> MappingChoice:
+    """Min-cycle spatial mapping for a SCAN layer at chunk length
+    ``chunk`` (``dataflow.cycles_scan`` costing, deterministic ties,
+    same factored-beats-pair-only-strictly rule as ``best_mapping``).
+    The chunk is part of the memo key: the per-chunk GEMM shapes — and
+    with them the best unrolling — change with the chunk length."""
+    from repro.core.workload import SCAN, scan_macs
+    assert layer.op == SCAN, layer.op
+    if spatial_mode not in SPATIAL_MODES:
+        raise ValueError(f"unknown spatial_mode {spatial_mode!r}; "
+                         f"choose from {SPATIAL_MODES}")
+    if memo is not None:
+        return memo.lookup(
+            "spatial",
+            (layer.signature, rows, cols, fixed_wiring, spatial_mode,
+             "scan", chunk),
+            lambda: best_scan_mapping(layer, rows, cols, chunk=chunk,
+                                      fixed_wiring=fixed_wiring,
+                                      spatial_mode=spatial_mode))
+    smacs = scan_macs(layer, chunk)
+    best: Optional[MappingChoice] = None
+    n_pairs = 0
+    for m in enumerate_scan_mappings(layer):
+        n_pairs += 1
+        cyc = dataflow.cycles_scan(layer, m, rows, cols, chunk=chunk,
+                                   fixed_wiring=fixed_wiring)
+        if best is None or (cyc, m) < (best.cycles, best.mapping):
+            best = MappingChoice(m, cyc, smacs / (cyc * rows * cols))
+    assert best is not None
+    if spatial_mode == "factored" and not fixed_wiring:
+        sizes = dataflow.dim_sizes(layer)
+        red = frozenset(dataflow.reduction_dims(layer))
+        useful = [d for d in SCAN_SPATIAL_DIMS if sizes[d] > 1]
+        if len(useful) >= 2:
+            best_cyc, best_fm = best.cycles, None
+            for ra in _axis_options(sizes, red, useful, rows):
+                for ca in _axis_options(sizes, red, useful, cols):
+                    fm = (ra, ca)
+                    if not dataflow.factored_legal(layer, fm, rows, cols):
+                        continue
+                    cyc = dataflow.cycles_scan(layer, fm, rows, cols,
+                                               chunk=chunk)
+                    if cyc < best_cyc or (cyc == best_cyc
+                                          and best_fm is not None
+                                          and fm < best_fm):
+                        best_cyc, best_fm = cyc, fm
+            if best_fm is not None:
+                best = MappingChoice(best_fm, best_cyc,
+                                     smacs / (best_cyc * rows * cols))
+    obs.count("mapper.spatial.scan_enumerated", n_pairs)
+    if obs.current() is not None:
+        obs.event("mapper.spatial", layer=layer.name,
+                  mapping=dataflow.mapping_label(best.mapping),
+                  cycles=best.cycles, chunk=chunk,
+                  utilization=round(best.utilization, 4))
+    return best
+
+
 def best_fixed_mapping(layers: List[Layer], rows: int = 16,
                        cols: int = 16) -> GenericMapping:
     """Single network-wide mapping for the non-reconfigurable array: the

@@ -26,12 +26,22 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro import obs
 from repro.core.costmodel import HWSpec
 from repro.core.fusion import SpillEdge
-from repro.core.workload import MAC_OPS, NORM, SOFTMAX, Layer
+from repro.core.workload import (MAC_OPS, NORM, SCAN, SOFTMAX, Layer,
+                                 scan_macs, scan_state_bytes)
 from repro.search import tiler
 
 
 def _ceil(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def _is_compute(l: Layer) -> bool:
+    """MAC layers plus SCAN: the ops that own a fusion group's array
+    time.  SCAN is compute for span *structure* (trailing nonlinears
+    fuse into its per-chunk writeback) but never joins a multi-compute
+    depth-first tile — the state carry serializes the sequence dim, so
+    a MAC<->scan interior tensor cannot stream tile-by-tile."""
+    return l.op in MAC_OPS or l.op == SCAN
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +93,38 @@ def _mac_base_pj(l: Layer, cyc: int, hw: HWSpec, *,
     return pj
 
 
+def _scan_cycles(l: Layer, cycles_by_name: Dict[str, int], hw: HWSpec,
+                 chunk: int) -> int:
+    """A SCAN layer's cycle count: the mapper-derived value when the
+    caller provides one, else the default state-dims-on-array mapping —
+    the same fallback ``costmodel.cost_network_scheduled`` uses."""
+    cyc = cycles_by_name.get(l.name)
+    if cyc is None:
+        from repro.core import dataflow
+        cyc = dataflow.cycles_scan(l, ("k", "c"), hw.rows, hw.cols,
+                                   chunk=chunk)
+    return cyc
+
+
+def _scan_pj(l: Layer, cyc: int, hw: HWSpec, chunk: int) -> float:
+    """Energy of one SCAN layer at chunk length ``chunk`` (mirrors
+    costmodel._scan_layer_cost accounting: full executed MACs, stream
+    traffic, and the per-chunk state round trips at the residency
+    level).  Both DP paths call exactly this function, so their probe
+    sums stay bit-identical."""
+    from repro.core.costmodel import scan_state_level
+    total = scan_macs(l, chunk)
+    rf = 4 * (total // max(hw.cols, 1) + l.output_elems)
+    pj = total * hw.e_mac + rf * hw.e_rf_byte + \
+        l.weight_bytes * hw.e_dram_byte + cyc * _static_pj_per_cycle(hw)
+    pj += (l.input_bytes + l.output_bytes + l.weight_bytes) \
+        * _stream_pj(hw)
+    n_chunks = _ceil(l.ox, chunk)
+    pj += 2 * scan_state_bytes(l) * l.b * n_chunks \
+        * scan_state_level(l, hw).pj_per_byte
+    return pj
+
+
 def _unfused_nonlinear_pj(l: Layer, hw: HWSpec) -> float:
     passes = 2 if l.op in (NORM, SOFTMAX) else 1
     stream = 2 * l.input_bytes
@@ -100,7 +142,7 @@ def _group_meta(layers: Sequence[Layer], j: int, i: int,
     unfused: List[str] = []
     seen_mac = False
     for l in layers[j:i]:
-        if l.op in MAC_OPS:
+        if _is_compute(l):
             seen_mac = True
         elif seen_mac:
             fused.append(l.name)       # pixelwise writeback fusion (C2)
@@ -113,20 +155,28 @@ def _group_meta(layers: Sequence[Layer], j: int, i: int,
 def _group_cost_brute(layers: Sequence[Layer], j: int, i: int,
                       cycles_by_name: Dict[str, int], hw: HWSpec,
                       budgets: Sequence[tiler.LevelBudget],
-                      tile_mode: str) -> Optional[Tuple[float, Group]]:
+                      tile_mode: str,
+                      scan_chunks: Optional[Dict[str, int]] = None
+                      ) -> Optional[Tuple[float, Group]]:
     """Reference per-span cost: the direct derivation every DP probe ran
     before the fast path (kept verbatim as the ``memo=None`` mode) — an
     independent implementation the hoisted/memoized probe loop is
     equality-tested against (``tests/test_search_perf.py``), and the
     dedup-off baseline the ``search.perf.*`` speedup rows measure."""
     sl = layers[j:i]
+    comp = [l for l in sl if _is_compute(l)]
+    scans = [l for l in sl if l.op == SCAN]
+    if scans and len(comp) > 1:
+        # the state carry serializes the scan: it never joins a
+        # multi-compute depth-first tile
+        return None
     macs = [l for l in sl if l.op in MAC_OPS]
     fused: List[str] = []
     unfused: List[str] = []
     pj = 0.0
     seen_mac = False
     for l in sl:
-        if l.op in MAC_OPS:
+        if _is_compute(l):
             seen_mac = True
         elif seen_mac:
             fused.append(l.name)       # pixelwise writeback fusion (C2)
@@ -135,7 +185,19 @@ def _group_cost_brute(layers: Sequence[Layer], j: int, i: int,
             pj += _unfused_nonlinear_pj(l, hw)
 
     tile: Optional[tiler.GroupTile] = None
-    if len(macs) > 1:
+    if scans:
+        l = scans[0]
+        if fused and scan_state_bytes(l) > max(
+                (cap for _, cap, _ in budgets), default=0):
+            # fusing past a chunk boundary needs the state scratch
+            # resident at a local level alongside the writeback path —
+            # when it fits nowhere on chip the trailing nonlinears
+            # cannot ride the per-chunk drain and the span is cut
+            return None
+        chunk = (scan_chunks or {}).get(l.name, 64)
+        pj += _scan_pj(l, _scan_cycles(l, cycles_by_name, hw, chunk),
+                       hw, chunk)
+    elif len(macs) > 1:
         stream_pj = _stream_pj(hw)
         tile = tiler.tile_group(sl, budgets=budgets, stream_pj=stream_pj,
                                 mode=tile_mode)
@@ -159,7 +221,9 @@ def _partition_brute(layers: Sequence[Layer],
                      cycles_by_name: Dict[str, int], hw: HWSpec,
                      act_budget: int,
                      budgets: Sequence[tiler.LevelBudget],
-                     max_span: int, tile_mode: str) -> Partition:
+                     max_span: int, tile_mode: str,
+                     scan_chunks: Optional[Dict[str, int]] = None
+                     ) -> Partition:
     """The pre-fastpath DP loop (direct per-span derivation, no memo,
     no hoisting): bit-identical groups/edges/cost to the fast loop."""
     spill_pj = hw.hierarchy.outermost.pj_per_byte
@@ -174,7 +238,7 @@ def _partition_brute(layers: Sequence[Layer],
             if dp[j] == INF:
                 continue
             gc = _group_cost_brute(layers, j, i, cycles_by_name, hw,
-                                   budgets, tile_mode)
+                                   budgets, tile_mode, scan_chunks)
             if gc is None:
                 continue
             pj, grp = gc
@@ -213,12 +277,12 @@ def _boundary_edge(layers: Sequence[Layer], groups: List[Group],
         return None
     prod = g.end - 1
     for idx in range(g.end - 1, g.start - 1, -1):
-        if layers[idx].op in MAC_OPS:
+        if _is_compute(layers[idx]):
             prod = idx
             break
     cons = nxt.start
     for idx in range(nxt.start, nxt.end):
-        if layers[idx].op in MAC_OPS:
+        if _is_compute(layers[idx]):
             cons = idx
             break
     is_ibn = layers[prod].ibn_role in ("expand", "act")
@@ -243,6 +307,7 @@ def partition_chain(layers: Sequence[Layer],
                     local_buffer: Optional[int] = None,
                     max_span: int = 10,
                     tile_mode: str = "full",
+                    scan_chunks: Optional[Dict[str, int]] = None,
                     memo=None) -> Partition:
     """Optimal contiguous segmentation of the chain into fusion groups.
 
@@ -274,16 +339,19 @@ def partition_chain(layers: Sequence[Layer],
         if memo is None:
             return _partition_brute(layers, cycles_by_name, hw,
                                     act_budget, budgets, max_span,
-                                    tile_mode)
+                                    tile_mode, scan_chunks)
         return _partition_fast(layers, cycles_by_name, hw, act_budget,
-                               budgets, max_span, tile_mode, memo)
+                               budgets, max_span, tile_mode, memo,
+                               scan_chunks)
 
 
 def _partition_fast(layers: Sequence[Layer],
                     cycles_by_name: Dict[str, int], hw: HWSpec,
                     act_budget: int,
                     budgets: Sequence[tiler.LevelBudget],
-                    max_span: int, tile_mode: str, memo) -> Partition:
+                    max_span: int, tile_mode: str, memo,
+                    scan_chunks: Optional[Dict[str, int]] = None
+                    ) -> Partition:
     """The memoized probe loop (see ``partition_chain``).  When a tracer
     is active it additionally tracks, per DP node, the runner-up
     segmentation total — the backtrace then emits one ``fusion.cut``
@@ -295,13 +363,29 @@ def _partition_fast(layers: Sequence[Layer],
     # probe loop (bit-identical: the probes sum the same floats in the
     # same order as the direct per-span derivation did) --
     stream_pj = _stream_pj(hw)
-    is_mac = [l.op in MAC_OPS for l in layers]
+    # "mac" in the structure arrays means compute-class: MAC layers plus
+    # SCAN (identical arrays on scan-free chains, so every pre-scan
+    # workload's DP runs the bit-exact same probes)
+    is_mac = [_is_compute(l) for l in layers]
+    is_scan = [l.op == SCAN for l in layers]
     # per-layer energy terms: (with, without) operand streaming for MAC
-    # layers, the unfused bus-streaming cost for nonlinears
+    # layers, the unfused bus-streaming cost for nonlinears; scans carry
+    # their full single-compute-span cost (they never tile into a
+    # multi-compute group, so the without-streaming slot is unused)
     mac_pj: List[Tuple[float, float]] = [(0.0, 0.0)] * n
     nl_pj: List[float] = [0.0] * n
+    # per-scan trailing-fusion legality: the [K, V] state scratch fits
+    # some local residence level
+    max_local = max((cap for _, cap, _ in budgets), default=0)
+    state_fits = [False] * n
     for idx, l in enumerate(layers):
-        if is_mac[idx]:
+        if is_scan[idx]:
+            chunk = (scan_chunks or {}).get(l.name, 64)
+            pj = _scan_pj(l, _scan_cycles(l, cycles_by_name, hw, chunk),
+                          hw, chunk)
+            mac_pj[idx] = (pj, pj)
+            state_fits[idx] = scan_state_bytes(l) <= max_local
+        elif is_mac[idx]:
             cyc = cycles_by_name[l.name]
             mac_pj[idx] = (_mac_base_pj(l, cyc, hw),
                            _mac_base_pj(l, cyc, hw, include_sram=False))
@@ -427,6 +511,12 @@ def _partition_fast(layers: Sequence[Layer],
                     if is_mac[idx]:
                         pj += mac_pj[idx][1]
             elif m == 1:
+                if is_scan[fm] and i - 1 > fm and not state_fits[fm]:
+                    # trailing nonlinears cannot fuse across the chunk
+                    # boundary when the state scratch fits no local
+                    # level — the span is cut right after the scan
+                    n_chain_break += 1
+                    continue
                 pj += mac_pj[fm][0]
             # boundary spill charged when this group is *opened*, i.e.
             # the tensor entering it came from the previous boundary

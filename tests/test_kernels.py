@@ -279,7 +279,8 @@ def test_depthwise_channel_independence():
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("t,chunk", [(32, 8), (32, 16), (64, 64), (48, 16)])
+@pytest.mark.parametrize("t,chunk", [(32, 8), (32, 16), (64, 64), (48, 16),
+                                     (50, 16), (33, 8), (100, 64)])
 def test_wkv_chunk_sweep(t, chunk):
     ks = jax.random.split(KEY, 5)
     BH, K = 4, 8
@@ -290,6 +291,27 @@ def test_wkv_chunk_sweep(t, chunk):
     u = jax.random.normal(ks[4], (BH, K)) * 0.5
     out, st = ops.wkv_chunked(r, k, v, logw, u, chunk=chunk)
     want, st_want = ref.wkv_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv_chunk_ragged_t():
+    """T % chunk != 0: the wrapper pads T to a chunk multiple and the
+    kernel masks the padded tail to the true ``valid_t`` extent, so a
+    ragged launch matches the sequential reference — the searched chunk
+    is honored verbatim instead of being shrunk to a divisor."""
+    ks = jax.random.split(KEY, 5)
+    BH, T, K = 2, 50, 8
+    r = jax.random.normal(ks[0], (BH, T, K)) * 0.5
+    k = jax.random.normal(ks[1], (BH, T, K)) * 0.5
+    v = jax.random.normal(ks[2], (BH, T, K)) * 0.5
+    logw = -jnp.exp(jax.random.normal(ks[3], (BH, T, K)) * 0.5)
+    u = jax.random.normal(ks[4], (BH, K)) * 0.5
+    out, st = ops.wkv_chunked(r, k, v, logw, u, chunk=16)
+    want, st_want = ref.wkv_ref(r, k, v, logw, u)
+    assert out.shape == (BH, T, K)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(st), np.asarray(st_want),

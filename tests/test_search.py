@@ -366,25 +366,25 @@ def test_schedule_json_roundtrip(tmp_path):
 
 
 def test_stale_v4_artifacts_rejected(tmp_path):
-    """A SEARCH_VERSION=4 cache entry must never be replayed as a v5
-    result: load_schedule refuses it and cached_search re-searches.
-    (v5: factored spatial mappings; spatial_mode hashed into the key.)"""
+    """A SEARCH_VERSION=4 cache entry must never be replayed as a
+    current result: load_schedule refuses it and cached_search
+    re-searches.  (v6: chunked-recurrence SCAN op class.)"""
     from repro.search.cache import SEARCH_VERSION, schedule_key
-    assert SEARCH_VERSION == 5
+    assert SEARCH_VERSION == 6
     wl = edgenext_workload(reduced_edgenext())
     key = schedule_key(wl, HW)
     path = tmp_path / f"edgenext-reduced-{key}.json"
     save_schedule(SCHED, path)
     doc = json.loads(path.read_text())
     doc["version"] = 4                   # a stale v4 artifact at the
-    path.write_text(json.dumps(doc))     # exact v5 cache path
+    path.write_text(json.dumps(doc))     # exact current cache path
     assert load_schedule(path) is None
     sched = cached_search(wl, HW, workload="edgenext-reduced",
                           cache_dir=tmp_path)
-    assert sched.version == 5
+    assert sched.version == SEARCH_VERSION
     assert sched.workload == "edgenext-reduced"
     # the refreshed artifact replaced the stale one
-    assert json.loads(path.read_text())["version"] == 5
+    assert json.loads(path.read_text())["version"] == SEARCH_VERSION
 
 
 def test_schedule_places_every_mac_layer():
@@ -457,7 +457,7 @@ def test_lowered_params_well_formed():
     assert SCHED.lowered, "EdgeNeXt must lower at least the IBN kernels"
     for name, lk in SCHED.lowered.items():
         assert lk["kernel"] in ("fused_ibn", "matmul_ln",
-                                "flash_attention"), name
+                                "flash_attention", "rwkv_chunk"), name
         for k, v in lk.items():
             if k.startswith("block_"):
                 assert v >= 1 and (v & (v - 1)) == 0, (name, k, v)

@@ -25,7 +25,7 @@ import pytest
 from repro.configs.edgenext_s import CONFIG
 from repro.core import dataflow
 from repro.core.costmodel import HWSpec
-from repro.core.workload import MAC_OPS, Layer, edgenext_workload
+from repro.core.workload import MAC_OPS, SCAN, Layer, edgenext_workload
 from repro.search import (WORKLOADS, auto_schedule, evaluate_schedule,
                           get_workload, load_schedule, save_schedule,
                           schedule_key)
@@ -237,6 +237,11 @@ def test_pair_mode_bit_identical_to_v4_selection(name):
     assert dataclasses.asdict(fast) == dataclasses.asdict(brute)
     by_name = {l.name: l for l in wl}
     for lname, m in fast.mappings.items():
+        if by_name[lname].op == SCAN:
+            # scan layers postdate v4: their mapping comes from the
+            # carry-constrained scan enumerator (ox is never spatial),
+            # while the v4 argmin happily splits ox
+            continue
         assert m == _v4_best_pair(by_name[lname]), lname
 
 
