@@ -1,6 +1,6 @@
 """Benchmark section for the serving layer: ``search.serve.*``.
 
-Four claims pinned into the BENCH trajectory:
+Six claims pinned into the BENCH trajectory:
 
   * warm-store hit latency — a served lookup against the pre-warmed
     ``ServeStore`` is a memory probe, reported against the cold
@@ -15,11 +15,18 @@ Four claims pinned into the BENCH trajectory:
     the serving workloads at batch {1, 4, 16, 64};
   * policy non-degeneracy — the arrival-rate policy's batch pick at
     each swept rate, with ``distinct_batches`` >= 2 over the rates
-    (batching must actually engage, not collapse to one level).
+    (batching must actually engage, not collapse to one level);
+  * fill-wait model validation — the simulated request loop's measured
+    mean fill wait vs the policy's ``(b-1)/(2λ)`` closed form at each
+    swept rate (``search.serve.loop.fillwait_err``, asserted < 10%);
+  * chaos survival — a deterministic fault-injection session arming
+    every fault class must serve every request through the degradation
+    ladder (``search.serve.chaos.*``, ``all_served`` asserted).
 
-Counter outcomes (hit vs miss) are asserted here — they are logical
-facts; the wall-clock ratios are reported as rows only (ROADMAP: noisy
-CI boxes flake wall-time asserts).
+Counter outcomes (hit vs miss, all-served, fill-wait error) are
+asserted here — they are logical facts; the wall-clock ratios are
+reported as rows only (ROADMAP: noisy CI boxes flake wall-time
+asserts).
 """
 from __future__ import annotations
 
@@ -32,7 +39,9 @@ from typing import List, Tuple
 from repro import obs
 from repro.core.costmodel import HWSpec
 from repro.search import auto_schedule, get_workload
-from repro.serve import ServeStore, co_search, distinct_batches, rate_table
+from repro.serve import (ChaosPlan, ServeStore, chaos_session, co_search,
+                         distinct_batches, poisson_arrivals, rate_table,
+                         simulate)
 
 Row = Tuple[str, float, str]
 
@@ -43,6 +52,8 @@ _BATCHES = (1, 4, 16, 64)
 _RATES = (2.0, 15.0, 60.0)
 _DEVICES = 4
 _HIT_REPS = 5
+_LOOP_REQUESTS = 2000
+_CHAOS_REQUESTS = 32
 
 
 def bench_serve() -> List[Row]:
@@ -130,6 +141,55 @@ def bench_serve() -> List[Row]:
                          distinct_batches(picks),
                          f">=2: batching engages over rates "
                          f"{list(_RATES)}, {_DEVICES}-device mesh"))
+
+        # the simulated request loop: measured mean fill wait vs the
+        # policy's (b-1)/(2λ) closed form at every swept rate.  The
+        # pure queueing core is exercised directly (the service time is
+        # irrelevant to the fill stage) at the batch level the policy
+        # picks for that rate — batch-1 picks are exact by definition,
+        # so the multi-request levels carry the real comparison.
+        pts = co_search(store, "edgenext-s", batches=_BATCHES)
+        for rate in _RATES:
+            pk = rate_table(pts, [rate], devices=_DEVICES)[0]
+            for b in sorted({pk.point.batch, 4, 16}):
+                rep_l = simulate(
+                    poisson_arrivals(_LOOP_REQUESTS, rate, seed=17),
+                    batch=b, service_s=pk.shard_point.latency_s,
+                    dispatch_s=0.020, rate_rps=rate)
+                err = rep_l.fillwait_err
+                assert err < 0.10, \
+                    f"fill-wait model off by {err:.1%} at b={b} λ={rate}"
+                rows.append((f"search.serve.loop.fillwait_err"
+                             f".rate{rate:g}.b{b}", err,
+                             f"measured {rep_l.fill_wait_mean_s*1e3:.2f}"
+                             f"ms vs model "
+                             f"{rep_l.model_fill_wait_s*1e3:.2f}ms over "
+                             f"{_LOOP_REQUESTS} req (<0.10 asserted)"))
+
+        # chaos survival: every fault class armed, every request served
+        plan = ChaosPlan(seed=23, worker_crash=0.4, corrupt_artifact=0.3,
+                         stale_lock=0.3, version_mismatch=0.3,
+                         slow_search=0.3, slow_s=0.0, crash_attempts=2)
+        chaos_store = ServeStore(tmp, hw, retry_attempts=2,
+                                 retry_backoff_s=0.001)
+        with obs.tracing() as tr:
+            rep_c = chaos_session(chaos_store, "edgenext-s",
+                                  n_requests=_CHAOS_REQUESTS, plan=plan,
+                                  batches=(1, 4))
+        assert rep_c.all_served, rep_c.outcomes
+        rows.append(("search.serve.chaos.served", rep_c.served,
+                     f"of {rep_c.requests} under faults "
+                     f"{ {k: v for k, v in rep_c.faults.items() if v} } "
+                     f"(all-served asserted)"))
+        rows.append(("search.serve.chaos.degraded", rep_c.degraded,
+                     f"outcomes {dict(sorted(rep_c.outcomes.items()))}"))
+        for fam in ("serve.retry.failure", "serve.retry.recovered",
+                    "serve.degrade.search_failed",
+                    "serve.degrade.nearest_batch",
+                    "serve.degrade.heuristic", "cache.lock_takeover"):
+            rows.append((f"search.serve.chaos.{fam}",
+                         tr.counters.get(fam, 0),
+                         "ladder bookkeeping under injected faults"))
     finally:
         shutil.rmtree(tmp, ignore_errors=True)
     return rows

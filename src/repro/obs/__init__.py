@@ -7,7 +7,14 @@ Three pieces:
                   counters/gauges, and the ambient active-tracer hooks
                   (``span``/``count``/``gauge``/``event``) every
                   instrumentation site in ``repro.search`` calls; all
-                  no-ops when no tracer is active.
+                  no-ops when no tracer is active.  The serving stack
+                  reports through the same hooks: ``cache.*`` (incl.
+                  ``cache.lock_takeover``), ``serve.retry.*`` (the
+                  cold-search retry/deadline envelope),
+                  ``serve.degrade.*`` (which degradation-ladder rung
+                  answered), ``serve.chaos.*`` (injected faults), and
+                  ``serve.loop.*`` (the simulated request loop) — all
+                  flow into BENCH rows via ``bench_rows`` generically.
   ``exporters`` — Chrome-trace/Perfetto JSON (``--trace out.json``,
                   load in ``chrome://tracing``) and ``search.obs.*``
                   BENCH rows.

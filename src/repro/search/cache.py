@@ -97,18 +97,39 @@ def save_schedule(schedule, path: Path) -> Path:
 
 
 # a claim older than this is stale even if its pid looks alive (pid
-# reuse): the claiming search should take milliseconds, not minutes
+# reuse): the claiming search should take milliseconds, not minutes.
+# ``REPRO_CLAIM_STALE_S`` overrides the default deployment-wide; the
+# ``stale_s`` keyword on ``_claim_store`` / ``cached_search`` overrides
+# it per call (a serving loop under a tight deadline wants takeovers in
+# seconds, a batch DSE sweep can afford minutes).
 _CLAIM_STALE_S = 120.0
 
 
-def _claim_store(path: Path) -> bool:
+def claim_stale_s(stale_s: Optional[float] = None) -> float:
+    """The effective claim-staleness threshold: the explicit keyword,
+    else the ``REPRO_CLAIM_STALE_S`` environment override, else the
+    built-in default."""
+    if stale_s is not None:
+        return float(stale_s)
+    env = os.environ.get("REPRO_CLAIM_STALE_S")
+    if env:
+        try:
+            return float(env)
+        except ValueError:
+            pass
+    return _CLAIM_STALE_S
+
+
+def _claim_store(path: Path, stale_s: Optional[float] = None) -> bool:
     """Try to claim the store of one artifact key via an exclusive
     ``<path>.lock`` file holding the claimant's pid.  Returns True when
     this process owns the store (and must ``_release_store`` after the
     ``os.replace``), False when another live writer already holds it.
-    A claim whose owner died mid-search (or that outlived
-    ``_CLAIM_STALE_S``) is broken and re-taken, so a crashed writer can
-    never wedge the key."""
+    A claim whose owner died mid-search (or that outlived the staleness
+    threshold — see ``claim_stale_s``) is broken and re-taken
+    (``cache.lock_takeover``), so a crashed writer can never wedge the
+    key."""
+    limit = claim_stale_s(stale_s)
     lock = Path(f"{path}.lock")
     lock.parent.mkdir(parents=True, exist_ok=True)
     for _ in range(2):
@@ -127,15 +148,28 @@ def _claim_store(path: Path) -> bool:
                     alive = True
                 except (OSError, PermissionError):
                     alive = False
-            if alive and age < _CLAIM_STALE_S:
+            if alive and age < limit:
                 return False
             try:                # stale claim: break it and retry once
                 os.unlink(lock)
+                obs.count("cache.lock_takeover")
+                obs.event("cache.lock_takeover", path=str(lock), pid=pid,
+                          age_s=age, alive=alive)
             except OSError:
                 pass
             continue
-        with os.fdopen(fd, "w") as f:
-            f.write(str(os.getpid()))
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(str(os.getpid()))
+        except BaseException:
+            # never leak a claim we failed to stamp: the lock file
+            # exists but carries no pid, which would wedge the key for
+            # the full staleness window
+            try:
+                os.unlink(lock)
+            except OSError:
+                pass
+            raise
         return True
     return False
 
@@ -243,12 +277,56 @@ def _remap_layer_names(sched, layers: List[Layer]):
         return None
 
 
+def try_replay(path: Path, layers: List[Layer], key: str, *,
+               workload: str = "custom"):
+    """Attempt to replay one artifact against a request: load, verify
+    the embedded key, and name-remap onto the request's layers.
+
+    Returns ``(schedule, outcome)`` — ``(Schedule, "hit")`` on success,
+    else ``(None, why)`` with ``why`` one of ``"absent"`` (no file —
+    nothing counted), ``"version"`` (``cache.version_reject``), or
+    ``"corrupt"`` (``cache.corrupt``: unreadable / non-reconstructing /
+    key-mismatched / ambiguously named).  Emits exactly the counters and
+    ``cache.replay`` events ``cached_search`` always emitted for its
+    replay half; extracted so the serving degradation ladder can probe
+    the disk tier without committing to the search half."""
+    path = Path(path)
+    if not path.exists():
+        return None, "absent"
+    sched, why = _load(path)
+    if sched is not None and sched.key != key:
+        # filename/key disagreement inside the artifact body
+        sched, why = None, "corrupt"
+    if sched is not None:
+        remapped = _remap_layer_names(sched, layers)
+        if remapped is None:
+            why = "corrupt"        # names do not tile the chain
+        else:
+            renamed = remapped is not sched
+            if renamed:
+                obs.count("cache.rename_remap")
+            obs.count("cache.hit")
+            obs.event("cache.replay", outcome="hit", workload=workload,
+                      key=key, path=str(path), renamed=renamed)
+            return remapped, "hit"
+    if why == "version":
+        obs.count("cache.version_reject")
+    else:                          # "unreadable" | "corrupt"
+        why = "corrupt"
+        obs.count("cache.corrupt")
+    obs.event("cache.replay", outcome=why, workload=workload,
+              key=key, path=str(path))
+    return None, why
+
+
 def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                   workload: str = "custom",
                   cache_dir: Optional[Path] = None,
                   refresh: bool = False,
                   tile_mode: str = "full",
-                  spatial_mode: str = "factored"):
+                  spatial_mode: str = "factored",
+                  replay: bool = True,
+                  stale_s: Optional[float] = None):
     """Run (or replay) the auto-scheduler through the artifact cache.
     Replayed artifacts are name-remapped onto the request's layers (the
     content-hashed key is rename-stable by design).  ``tile_mode`` and
@@ -269,7 +347,18 @@ def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
     of N processes missing on the same key at once exactly one claims
     the store via a per-key lock file; the rest search and return
     without writing (``store_skipped``), so a hammered cache dir sees
-    one ``store`` per key and zero corrupt replays."""
+    one ``store`` per key and zero corrupt replays.  The claim is
+    released in a ``finally`` — a claimant that raises between claim
+    and store (a crashed search, an injected fault) never leaks the
+    lock file; a claim that *was* leaked by a killed process is broken
+    after ``stale_s`` seconds (``cache.lock_takeover``, default via
+    ``claim_stale_s``).
+
+    ``replay=False`` skips the artifact-replay half entirely (the
+    caller — e.g. the serving degradation ladder — already probed the
+    disk tier itself and wants exactly one ``cache.corrupt`` count per
+    bad artifact, not two): the call counts a miss, searches, and
+    stores under the claim."""
     from repro.search.auto import auto_schedule
     hw = hw or HWSpec()
     if cache_dir is None:
@@ -279,37 +368,17 @@ def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
     key = schedule_key(layers, hw, tile_mode=tile_mode,
                        spatial_mode=spatial_mode)
     path = Path(cache_dir) / f"{workload}-{key}.json"
-    if not refresh and path.exists():
-        sched, why = _load(path)
-        if sched is not None and sched.key != key:
-            # filename/key disagreement inside the artifact body
-            sched, why = None, "corrupt"
+    if replay and not refresh:
+        sched, _why = try_replay(path, layers, key, workload=workload)
         if sched is not None:
-            remapped = _remap_layer_names(sched, layers)
-            if remapped is None:
-                why = "corrupt"    # names do not tile the chain
-            else:
-                renamed = remapped is not sched
-                if renamed:
-                    obs.count("cache.rename_remap")
-                obs.count("cache.hit")
-                obs.event("cache.replay", outcome="hit",
-                          workload=workload, key=key, path=str(path),
-                          renamed=renamed)
-                return remapped
-        if why == "version":
-            obs.count("cache.version_reject")
-        else:                      # "unreadable" | "corrupt"
-            obs.count("cache.corrupt")
-        obs.event("cache.replay", outcome=why, workload=workload,
-                  key=key, path=str(path))
+            return sched
     obs.count("cache.miss")
     obs.event("cache.replay", outcome="miss", workload=workload, key=key,
               refresh=refresh)
     # claim BEFORE the search so concurrent missers resolve the single
     # writer up front; ``refresh`` is an explicit operator override and
     # always stores (atomic replace makes the last writer win safely)
-    claimed = _claim_store(path)
+    claimed = _claim_store(path, stale_s)
     try:
         sched = auto_schedule(layers, hw, workload=workload,
                               tile_mode=tile_mode,

@@ -13,9 +13,20 @@
     PYTHONPATH=src python -m repro.serve --arch edgenext-s \
         --rates 2,15,60 --devices 4 --cache-dir /tmp/serve-cache
 
+    # the simulated request loop: measured fill wait vs (b-1)/(2λ)
+    PYTHONPATH=src python -m repro.serve --arch edgenext-s --loop \
+        --rates 2,15,60 --requests 2000 --cache-dir /tmp/serve-cache
+
+    # a deterministic chaos session: inject every fault class, assert
+    # the degradation ladder served every request anyway
+    PYTHONPATH=src python -m repro.serve --arch edgenext-s \
+        --chaos all=0.3 --requests 24 --cache-dir /tmp/serve-cache
+
 Rows print as ``name,value,note`` CSV (the same shape as the BENCH
 surface); counters from the lookup path print as ``serve.cache.*`` so a
-smoke run can assert hit/miss outcomes directly.
+smoke run can assert hit/miss outcomes directly, and chaos/loop runs
+print their ``serve.degrade.*`` / ``serve.retry.*`` / ``serve.chaos.*``
+/ ``serve.loop.*`` counters the same way.
 """
 from __future__ import annotations
 
@@ -41,6 +52,22 @@ def _counter_rows(prefix: str, counters) -> None:
     mem = counters.get("serve.store.mem_hit", 0)
     if mem:
         print(f"{prefix}.mem_hit,{mem},served from the in-process layer")
+
+
+def _robustness_rows(counters) -> None:
+    """The serving-robustness counter families, zero-filled so smoke
+    greps always find the row."""
+    for key in ("serve.retry.attempt", "serve.retry.failure",
+                "serve.retry.recovered", "serve.retry.deadline_exceeded",
+                "serve.degrade.search_failed",
+                "serve.degrade.nearest_batch", "serve.degrade.heuristic",
+                "cache.lock_takeover"):
+        print(f"{key},{counters.get(key, 0)},")
+    from repro.serve.chaos import FAULTS
+    for fault in FAULTS:
+        key = f"serve.chaos.{fault}"
+        if key in counters:
+            print(f"{key},{counters[key]},injected")
 
 
 def main(argv=None) -> int:
@@ -72,6 +99,25 @@ def main(argv=None) -> int:
     ap.add_argument("--dispatch-ms", type=float, default=20.0,
                     help="per-batch launch overhead the policy "
                          "amortizes (host dispatch + weight upload)")
+    ap.add_argument("--loop", action="store_true",
+                    help="run the simulated request loop at each --rates "
+                         "rate and print measured fill wait vs the "
+                         "(b-1)/(2λ) closed form")
+    ap.add_argument("--requests", type=int, default=2000, metavar="N",
+                    help="requests per simulated loop / chaos session")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="determinism seed for arrivals and chaos draws")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for --loop, and the "
+                         "cold-search budget for --chaos lookups")
+    ap.add_argument("--fill-ms", type=float, default=None,
+                    help="batch-fill timer for --loop (partial batches "
+                         "dispatch at this age)")
+    ap.add_argument("--retries", type=int, default=3,
+                    help="cold-search attempts in the retry envelope")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="run a fault-injection session, e.g. "
+                         "'all=0.3' or 'worker_crash=0.5,stale_lock=0.2'")
     args = ap.parse_args(argv)
 
     arches = args.arch or ["edgenext-s"]
@@ -79,7 +125,11 @@ def main(argv=None) -> int:
                if args.batches else BATCH_LEVELS)
     cache_dir = args.cache_dir or Path(
         tempfile.mkdtemp(prefix="repro-serve-"))
-    store = ServeStore(cache_dir, HWSpec())
+    deadline_s = (args.deadline_ms * 1e-3
+                  if args.deadline_ms is not None else None)
+    store = ServeStore(cache_dir, HWSpec(),
+                       retry_attempts=args.retries,
+                       search_deadline_s=deadline_s)
     print(f"# serve store at {cache_dir} "
           f"(arch={','.join(arches)} batches={list(batches)})")
 
@@ -128,6 +178,52 @@ def main(argv=None) -> int:
                       f"{sat}")
             print(f"serve.policy.{arch}.distinct_batches,"
                   f"{distinct_batches(picks)},over rates {rates}")
+
+    if args.loop:
+        from repro.serve.loop import run_loop
+        rates = parse_rates(args.rates)
+        fill_s = args.fill_ms * 1e-3 if args.fill_ms is not None else None
+        for arch in arches:
+            for rate in rates:
+                with obs.tracing() as tr:
+                    rep = run_loop(
+                        store, arch, rate_rps=rate,
+                        n_requests=args.requests, seed=args.seed,
+                        batches=batches,
+                        dispatch_s=args.dispatch_ms * 1e-3,
+                        devices=args.devices, fill_timeout_s=fill_s,
+                        deadline_s=deadline_s)
+                print(f"serve.loop.{arch}.rate{rate:g}.batch,{rep.batch},"
+                      f"{rep.requests} req, {rep.batches} batches "
+                      f"({rep.partial_batches} partial)")
+                print(f"serve.loop.{arch}.rate{rate:g}.fill_wait_ms,"
+                      f"{rep.fill_wait_mean_s * 1e3:.6g},"
+                      f"model {rep.model_fill_wait_s * 1e3:.6g}ms")
+                print(f"serve.loop.{arch}.rate{rate:g}.fillwait_err,"
+                      f"{rep.fillwait_err:.4f},|measured-model|/model")
+                if deadline_s is not None:
+                    print(f"serve.loop.{arch}.rate{rate:g}.deadline_miss,"
+                          f"{rep.deadline_misses},"
+                          f"of {rep.requests} at {args.deadline_ms:g}ms")
+
+    if args.chaos:
+        from repro.serve.chaos import ChaosPlan, chaos_session
+        plan = ChaosPlan.parse(args.chaos, seed=args.seed)
+        chaos_batches = tuple(b for b in batches if b <= 4) or batches[:1]
+        for arch in arches:
+            store.warm([arch], batches=chaos_batches)
+            with obs.tracing() as tr:
+                rep = chaos_session(store, arch,
+                                    n_requests=args.requests, plan=plan,
+                                    batches=chaos_batches)
+            served = "all served" if rep.all_served else "REQUESTS LOST"
+            print(f"serve.chaos.{arch}.served,{rep.served},"
+                  f"of {rep.requests} — {served}")
+            print(f"serve.chaos.{arch}.degraded,{rep.degraded},"
+                  f"outcomes {dict(sorted(rep.outcomes.items()))}")
+            _robustness_rows(tr.counters)
+            if not rep.all_served:
+                return 1
     return 0
 
 

@@ -26,6 +26,7 @@ class BatchPoint:
     energy_j: float
     edp: float
     key: str                       # schedule content hash
+    degraded: bool = False         # served off the degradation ladder
 
     @property
     def throughput_rps(self) -> float:
@@ -42,14 +43,18 @@ def co_search(store: ServeStore, workload: str, *,
               batches: Sequence[int] = BATCH_LEVELS) -> List[BatchPoint]:
     """The co-searched batch curve for one workload, batch-sorted.
     Every point carries its own searched schedule's cost numbers; the
-    schedules themselves stay resident in the store."""
+    schedules themselves stay resident in the store.  Points served off
+    the degradation ladder (search down, neighbor-rescaled or heuristic
+    cost) arrive flagged ``degraded`` — the policy still works, the
+    curve is just approximate until the fault clears."""
     pts: List[BatchPoint] = []
     for b in sorted(set(batches)):
-        name, _, key = store.resolve(workload, b)
-        sched = store.lookup(workload, b)
+        res = store.request(workload, b)
+        sched = res.schedule
         pts.append(BatchPoint(
-            workload=name, batch=b,
+            workload=res.workload, batch=b,
             latency_s=sched.cost["latency_s"],
             energy_j=sched.cost["energy_j"],
-            edp=sched.cost["edp"], key=key))
+            edp=sched.cost["edp"], key=res.key,
+            degraded=res.degraded))
     return pts

@@ -66,27 +66,55 @@ class ServePolicy:
 
     def evaluate(self, points: Sequence[BatchPoint],
                  rate_rps: float) -> List[BatchPick]:
-        """One BatchPick per co-searched level (policy introspection)."""
+        """One BatchPick per co-searched level (policy introspection).
+
+        Two boundary cases are defined, not incidental:
+
+          * ``rate_rps == 0`` — the fill-wait closed form ``(b-1)/(2λ)``
+            diverges (a batch of 2 literally never fills when nothing
+            arrives), so every level above batch 1 is marked saturated
+            and its fill wait pinned to ``inf``; batch 1 needs no fill
+            and keeps its finite latency, making it the only feasible
+            pick (pinned in tests).
+          * ``rate_rps`` exactly at a level's sustained ceiling — the
+            level still covers the rate (``saturated`` uses a strict
+            ``<``), so an arrival stream running a level at exactly
+            100% utilization is feasible, never a silent fallback.
+        """
         by_batch = {p.batch: p for p in points}
         out: List[BatchPick] = []
         for p in sorted(points, key=lambda q: q.batch):
             shard, d = self._shard(p, by_batch)
             service = shard.latency_s
             sustained = p.batch / (self.dispatch_s + service)
-            fill = (p.batch - 1) / (2.0 * rate_rps) if rate_rps > 0 else 0.0
+            if rate_rps > 0:
+                fill = (p.batch - 1) / (2.0 * rate_rps)
+                saturated = sustained < rate_rps
+            else:
+                # zero (or negative) arrival rate: only batch 1 ever
+                # dispatches — larger batches wait forever for a fill
+                fill = 0.0 if p.batch == 1 else float("inf")
+                saturated = p.batch != 1
             out.append(BatchPick(
                 rate_rps=rate_rps, point=p, shard_point=shard, devices=d,
                 expected_latency_s=fill + self.dispatch_s + service,
                 sustained_rps=sustained,
-                saturated=sustained < rate_rps))
+                saturated=saturated))
         return out
 
     def pick(self, points: Sequence[BatchPoint],
              rate_rps: float) -> BatchPick:
-        """The chosen level for one arrival rate (see module docstring)."""
+        """The chosen level for one arrival rate (see module docstring).
+        ``rate_rps <= 0`` picks the smallest batch level (batch 1 when
+        co-searched: with no arrivals to fill a batch, anything larger
+        would wait forever)."""
         if not points:
             raise ValueError("no co-searched batch points to pick from")
         cands = self.evaluate(points, rate_rps)
+        if rate_rps <= 0:
+            # zero-rate: batch 1 (or the smallest co-searched level) —
+            # the only one a single stray request ever dispatches
+            return min(cands, key=lambda c: c.point.batch)
         feasible = [c for c in cands if not c.saturated]
         if feasible:
             return min(feasible, key=lambda c: (c.expected_latency_s,

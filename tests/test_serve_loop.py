@@ -1,0 +1,237 @@
+"""The simulated request loop: policy boundary cases, the queueing
+core against hand traces, and the ``(b-1)/(2λ)`` fill-wait closed form
+against measured Poisson arrivals."""
+import pytest
+
+from repro import obs
+from repro.serve import (BatchPoint, ServePolicy, model_fill_wait,
+                         pick_batch, poisson_arrivals, run_loop,
+                         simulate, trace_arrivals)
+from repro.serve.loop import LOOP_RATES
+
+
+def _pt(batch, lat):
+    return BatchPoint(workload=f"w-b{batch}", batch=batch,
+                      latency_s=lat, energy_j=1.0, edp=lat, key="k")
+
+
+_CURVE = [_pt(1, 0.010), _pt(4, 0.036), _pt(16, 0.120)]
+
+
+# ---------------------------------------------------------------------------
+# policy boundary cases (satellite: defined, not incidental)
+# ---------------------------------------------------------------------------
+
+
+def test_policy_zero_rate_picks_batch_one():
+    """λ=0: the fill form divides by zero; defined as batch 1 (nothing
+    larger ever fills when nothing arrives)."""
+    pick = pick_batch(_CURVE, 0.0)
+    assert pick.point.batch == 1
+    assert not pick.saturated
+    # negative rates take the same defined path
+    assert pick_batch(_CURVE, -1.0).point.batch == 1
+
+
+def test_policy_zero_rate_marks_larger_batches_infeasible():
+    pol = ServePolicy(dispatch_s=0.020)
+    cands = {c.point.batch: c for c in pol.evaluate(_CURVE, 0.0)}
+    assert not cands[1].saturated
+    assert cands[1].expected_latency_s == pytest.approx(0.030)
+    for b in (4, 16):
+        assert cands[b].saturated
+        assert cands[b].expected_latency_s == float("inf")
+
+
+def test_policy_zero_rate_without_batch_one_point():
+    """No co-searched batch-1 level: still the smallest level, never
+    the max-throughput saturation fallback."""
+    assert pick_batch(_CURVE[1:], 0.0).point.batch == 4
+
+
+def test_policy_rate_at_exact_ceiling_is_feasible():
+    """λ exactly equal to a level's sustained ceiling: the level still
+    covers the rate (strict <), not a silent saturation fallback."""
+    pol = ServePolicy(dispatch_s=0.020)
+    # batch 1: sustained = 1 / (0.020 + 0.010)
+    ceiling = 1.0 / 0.030
+    cands = {c.point.batch: c for c in pol.evaluate(_CURVE, ceiling)}
+    assert cands[1].sustained_rps == pytest.approx(ceiling)
+    assert not cands[1].saturated
+    # one epsilon above the ceiling saturates it
+    above = {c.point.batch: c
+             for c in pol.evaluate(_CURVE, ceiling * (1 + 1e-9))}
+    assert above[1].saturated
+
+
+# ---------------------------------------------------------------------------
+# arrival generators
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_arrivals_deterministic_and_calibrated():
+    a = poisson_arrivals(4000, 15.0, seed=3)
+    b = poisson_arrivals(4000, 15.0, seed=3)
+    assert a == b                                  # seed-deterministic
+    assert a != poisson_arrivals(4000, 15.0, seed=4)
+    assert all(x < y for x, y in zip(a, a[1:]))    # strictly increasing
+    mean_gap = a[-1] / len(a)
+    assert mean_gap == pytest.approx(1 / 15.0, rel=0.05)
+    with pytest.raises(ValueError):
+        poisson_arrivals(10, 0.0)
+
+
+def test_trace_arrivals_accumulates():
+    assert trace_arrivals([0.5, 0.25, 0.25]) == [0.5, 0.75, 1.0]
+
+
+def test_model_fill_wait_closed_form():
+    assert model_fill_wait(1, 15.0) == 0.0
+    assert model_fill_wait(4, 2.0) == pytest.approx(0.75)
+    assert model_fill_wait(4, 0.0) == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# the queueing core, pinned on hand-computed traces
+# ---------------------------------------------------------------------------
+
+
+def test_simulate_hand_trace_fill_and_queue():
+    """Arrivals at 1,2,3,4s, batch 2, 0.5s service: batch A dispatches
+    at t=2 (fills), B at t=4; the first member of each waits one gap."""
+    rep = simulate([1.0, 2.0, 3.0, 4.0], batch=2, service_s=0.5,
+                   rate_rps=1.0)
+    assert rep.batches == 2 and rep.partial_batches == 0
+    waits = [r.fill_wait_s for r in rep.records]
+    assert waits == [1.0, 0.0, 1.0, 0.0]
+    assert rep.fill_wait_mean_s == pytest.approx(0.5)
+    assert rep.model_fill_wait_s == pytest.approx(0.5)   # (2-1)/(2*1)
+    assert rep.fillwait_err == pytest.approx(0.0)
+    # server free at 2.5 before batch B dispatches at 4: no queueing
+    assert rep.queue_wait_mean_s == 0.0
+    assert rep.makespan_s == pytest.approx(4.5)
+
+
+def test_simulate_queueing_behind_busy_server():
+    """Service longer than the batch gap: batch B queues behind A."""
+    rep = simulate([1.0, 2.0, 3.0, 4.0], batch=2, service_s=3.0,
+                   rate_rps=1.0)
+    b = rep.records[2]                    # first member of batch B
+    assert b.dispatched_s == pytest.approx(4.0)
+    assert b.started_s == pytest.approx(5.0)      # A holds until 2+3
+    assert b.queue_wait_s == pytest.approx(1.0)
+
+
+def test_simulate_fill_timer_flushes_partials():
+    """One arrival then silence: the fill timer dispatches a partial
+    batch at first_arrival + timeout, and partials never enter the
+    fill-wait mean (they wait the timer, not the fill)."""
+    rep = simulate([1.0, 10.0], batch=4, service_s=0.1,
+                   fill_timeout_s=2.0, rate_rps=1.0)
+    assert rep.batches == 2 and rep.partial_batches == 2
+    assert rep.records[0].dispatched_s == pytest.approx(3.0)
+    assert not rep.records[0].full
+    assert rep.records[1].dispatched_s == pytest.approx(12.0)
+    assert rep.fill_wait_mean_s == 0.0     # no full batches to average
+    assert rep.deadline_misses == 0
+
+
+def test_simulate_end_of_stream_flush_without_timer():
+    """No timer: the tail partial flushes at its last member's arrival
+    (the simulation must terminate, not wait forever)."""
+    rep = simulate([1.0, 2.0, 3.0], batch=2, service_s=0.1,
+                   rate_rps=1.0)
+    assert rep.batches == 2 and rep.partial_batches == 1
+    assert rep.records[2].dispatched_s == pytest.approx(3.0)
+
+
+def test_simulate_deadline_misses_counted_requests_still_served():
+    rep = simulate([1.0, 1.1], batch=2, service_s=5.0, deadline_s=1.0,
+                   rate_rps=10.0)
+    assert rep.deadline_misses == 2
+    assert rep.requests == 2               # served late, never dropped
+    assert all(r.deadline_miss for r in rep.records)
+
+
+def test_simulate_batch_one_is_exact():
+    """b=1: every batch fills on arrival — measured 0, model 0, err 0."""
+    rep = simulate(poisson_arrivals(500, 15.0, seed=0), batch=1,
+                   service_s=0.001, rate_rps=15.0)
+    assert rep.fill_wait_mean_s == 0.0
+    assert rep.model_fill_wait_s == 0.0
+    assert rep.fillwait_err == 0.0
+    assert rep.partial_batches == 0
+
+
+def test_simulate_rejects_bad_batch():
+    with pytest.raises(ValueError):
+        simulate([1.0], batch=0, service_s=0.1)
+
+
+# ---------------------------------------------------------------------------
+# the closed form vs sampled arrivals (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_fillwait_matches_closed_form_within_tolerance():
+    """At 2000 Poisson arrivals the measured mean fill wait of full
+    batches lands within 10% of (b-1)/(2λ) — the BENCH acceptance, at
+    its exact rates."""
+    for rate in LOOP_RATES:
+        for batch in (4, 16):
+            rep = simulate(poisson_arrivals(2000, rate, seed=7),
+                           batch=batch, service_s=1e-4, rate_rps=rate)
+            assert rep.fillwait_err < 0.10, \
+                f"b={batch} λ={rate}: err {rep.fillwait_err:.3f}"
+
+
+@pytest.mark.slow
+def test_fillwait_convergence_sweep():
+    """The wide sweep: every (batch, rate, seed) combo converges."""
+    for seed in range(5):
+        for rate in LOOP_RATES:
+            for batch in (2, 4, 16, 64):
+                rep = simulate(poisson_arrivals(4000, rate, seed=seed),
+                               batch=batch, service_s=1e-4,
+                               rate_rps=rate)
+                assert rep.fillwait_err < 0.10
+
+
+# ---------------------------------------------------------------------------
+# run_loop: the store-driven end-to-end driver
+# ---------------------------------------------------------------------------
+
+
+def test_run_loop_end_to_end(tmp_path):
+    from repro.serve import ServeStore
+    store = ServeStore(tmp_path / "cache")
+    with obs.tracing() as tr:
+        rep = run_loop(store, "edgenext-reduced", rate_rps=30.0,
+                       n_requests=600, seed=1, batch=4, batches=(1, 4),
+                       dispatch_s=0.001)
+    assert rep.batch == 4 and rep.requests == 600
+    assert rep.fillwait_err < 0.10
+    assert tr.counters["serve.loop.requests"] == 600
+    assert tr.counters["serve.loop.batches"] == rep.batches
+    assert tr.gauges["serve.loop.fillwait_err"] == rep.fillwait_err
+    # the driver co-searched the curve through the serving ladder
+    assert tr.counters["cache.miss"] == 2
+    # same store, same seed: a second run replays and reproduces
+    rep2 = run_loop(store, "edgenext-reduced", rate_rps=30.0,
+                    n_requests=600, seed=1, batch=4, batches=(1, 4),
+                    dispatch_s=0.001)
+    assert rep2.fill_wait_mean_s == rep.fill_wait_mean_s
+
+
+def test_run_loop_policy_pick_and_deadlines(tmp_path):
+    """Without an explicit batch the policy picks; tiny service + low
+    rate => batch 1 (fill wait dominates), and a generous deadline is
+    never missed."""
+    from repro.serve import ServeStore
+    store = ServeStore(tmp_path / "cache")
+    rep = run_loop(store, "edgenext-reduced", rate_rps=2.0,
+                   n_requests=200, seed=0, batches=(1, 4),
+                   dispatch_s=0.001, deadline_s=10.0)
+    assert rep.batch == 1
+    assert rep.deadline_misses == 0
+    assert rep.fillwait_err == 0.0
