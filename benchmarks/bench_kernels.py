@@ -10,7 +10,6 @@ from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops, ref
 

@@ -1,0 +1,37 @@
+"""BENCH rows for the static verifier: verify latency on a searched
+schedule, mutation-corpus catch rate, and race-explorer throughput."""
+from __future__ import annotations
+
+import time
+
+
+def bench_check():
+    from repro.check import verify_schedule
+    from repro.check.mutations import MUTATIONS, run_corpus
+    from repro.check.races import explore
+    from repro.search import auto_schedule, get_workload
+
+    layers = get_workload("edgenext-s")
+    sched = auto_schedule(layers, workload="edgenext-s")
+    t0 = time.perf_counter()
+    findings = verify_schedule(layers, sched, source="bench")
+    dt = (time.perf_counter() - t0) * 1e3
+    yield ("search.check.verify_ms", dt,
+           f"full static verify, {len(findings)} findings")
+    yield ("search.check.findings", float(len(findings)),
+           "searched edgenext-s must verify clean")
+
+    results, base_findings = run_corpus()
+    caught = sum(1 for r in results if r.caught)
+    yield ("search.check.mutations_caught", float(caught),
+           f"of {len(MUTATIONS)} seeded mutations")
+    yield ("search.check.base_findings",
+           float(sum(len(f) for f in base_findings.values())),
+           "clean base artifacts must have none")
+
+    t0 = time.perf_counter()
+    r = explore(3, max_crashes=2)
+    dt = time.perf_counter() - t0
+    yield ("search.check.race_states", float(r.states),
+           f"n=3 crashes=2, {r.terminals} terminals, "
+           f"{len(r.violations)} violations, {dt * 1e3:.1f} ms")

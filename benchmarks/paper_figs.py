@@ -5,16 +5,15 @@ The paper's own numbers are printed alongside for direct comparison.
 """
 from __future__ import annotations
 
-import time
 from typing import List, Tuple
 
 from repro.configs.edgenext_s import CONFIG
 from repro.core.costmodel import HWSpec, cost_network
-from repro.core.fusion import ibn_dram_share, optimize_tile, spill_edges
+from repro.core.fusion import ibn_dram_share, optimize_tile
 from repro.core.schedule import (evaluate_stack, layer_type_breakdown,
                                  normalized_stack, utilization)
-from repro.core.workload import (DWCONV, MAC_OPS, edgenext_workload,
-                                 ibn_groups, total_macs)
+from repro.core.workload import (MAC_OPS, edgenext_workload, ibn_groups,
+                                 total_macs)
 
 Row = Tuple[str, float, str]
 WL = edgenext_workload(CONFIG)

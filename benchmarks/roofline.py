@@ -13,11 +13,10 @@ counts while-loop bodies once).  MODEL_FLOPS = 6·N·D (train) or 2·N_active·D
 from __future__ import annotations
 
 import json
-import math
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.core.hloanalysis import HBM_BW, ICI_BW, PEAK_FLOPS
 from repro.models import get_module, params as param_lib
 

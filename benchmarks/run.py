@@ -40,6 +40,7 @@ def collect_rows() -> list:
     from benchmarks.dse import (bench_obs, bench_scan, bench_search,
                                 bench_search_perf, bench_spatial)
     from benchmarks.serve import bench_serve
+    from benchmarks.check import bench_check
 
     rows = []
     sections = dict(ALL)
@@ -49,6 +50,7 @@ def collect_rows() -> list:
     sections["search(perf)"] = bench_search_perf
     sections["search(obs)"] = bench_obs
     sections["search(serve)"] = bench_serve
+    sections["search(check)"] = bench_check
     for section, fn in sections.items():
         t0 = time.perf_counter()
         for name, value, note in fn():

@@ -15,10 +15,9 @@ validates the TPU kernel realizations against the JAX model:
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.edgenext_s import CONFIG, reduced_edgenext
-from repro.core.costmodel import HWSpec, cost_network
+from repro.core.costmodel import HWSpec
 from repro.core.fusion import ibn_dram_share, optimize_tile
 from repro.core.schedule import evaluate_stack, normalized_stack
 from repro.core.workload import edgenext_workload, ibn_groups, total_macs

@@ -33,9 +33,8 @@ from typing import Dict, List, Mapping, Optional, Tuple
 
 from repro.core import dataflow
 from repro.core.memory import MemoryHierarchy, MemoryLevel, paper_hierarchy
-from repro.core.workload import (ACT, ELEMWISE, MAC_OPS, NORM, SCAN,
-                                 SOFTMAX, Layer, scan_macs,
-                                 scan_state_bytes)
+from repro.core.workload import (MAC_OPS, NORM, SCAN, SOFTMAX, Layer,
+                                 scan_macs, scan_state_bytes)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -30,11 +30,9 @@ splits across both axes (no 2-D accumulation).  See
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, Literal, Optional, Tuple, Union
+from typing import Dict, Literal, Tuple, Union
 
-from repro.core.workload import (ACT, CONV, DWCONV, ELEMWISE, MAC_OPS,
-                                 MATMUL, NORM, PWCONV, SCAN, SOFTMAX, Layer)
+from repro.core.workload import DWCONV, MAC_OPS, SCAN, Layer
 
 Mapping = Literal["OXC", "CK", "CFX"]
 # generalized spatial mapping: (row_dim, col_dim) — any ordered pair of

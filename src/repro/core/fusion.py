@@ -26,7 +26,7 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.tiling import budget_tile_candidates
-from repro.core.workload import MAC_OPS, Layer, ibn_groups
+from repro.core.workload import MAC_OPS, Layer
 
 
 @dataclasses.dataclass(frozen=True)

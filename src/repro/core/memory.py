@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, Iterable, Optional, Tuple
 
 # operand classes a level can serve
 OPERANDS = ("input", "weight", "output")

@@ -16,8 +16,7 @@ import dataclasses
 from typing import Dict, List, Optional
 
 from repro.core.costmodel import HWSpec, NetworkCost, cost_network
-from repro.core.workload import (DWCONV, MAC_OPS, NORM, SOFTMAX, Layer,
-                                 total_macs)
+from repro.core.workload import Layer
 
 CONFIG_STACK = (
     ("baseline",      dict(reconfigurable=False, fuse_nonlinear=False,

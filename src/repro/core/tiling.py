@@ -26,7 +26,7 @@ ragged round.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Sequence, Tuple
+from typing import Iterable, List, Sequence
 
 # Candidate-enumeration modes:
 #   "full"   — all divisors + powers of two + caller-supplied imperfect

@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
-from typing import Iterator, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 from repro.configs.edgenext_s import EdgeNeXtConfig
 

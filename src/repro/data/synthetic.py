@@ -13,7 +13,7 @@ token[t-1] via a fixed random permutation, with occasional resets.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import numpy as np
 

@@ -16,8 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config, reduced
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import actshard, get_module, params as param_lib
-from repro.runtime import (batch_pspecs, build_decode_step,
-                           build_prefill_step, cache_pspecs,
+from repro.runtime import (build_decode_step, build_prefill_step,
                            model_param_pspecs)
 
 

@@ -2,7 +2,7 @@
 against these (weak-type-correct, shardable, zero allocation)."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -13,13 +13,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import time
-from pathlib import Path
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore_sharded

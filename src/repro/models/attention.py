@@ -21,7 +21,7 @@ KV-head gradients over the group automatically).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

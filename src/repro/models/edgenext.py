@@ -18,9 +18,8 @@ no stochastic depth, no positional embedding on the first SDTA block.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp

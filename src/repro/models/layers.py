@@ -8,7 +8,6 @@ path (paper contribution C3 at the XLA level; the Pallas kernel in
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -23,7 +23,7 @@ bwd) — the same wire profile as a dense Megatron FFN block.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

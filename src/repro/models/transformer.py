@@ -13,9 +13,7 @@ Entry points:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +22,6 @@ from jax import lax
 from repro.configs.base import ModelConfig
 from repro.models import actshard
 from repro.models import layers as L
-from repro.models.params import ParamDef
 
 Params = Dict[str, Any]
 

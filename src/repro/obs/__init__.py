@@ -13,8 +13,10 @@ Three pieces:
                   cold-search retry/deadline envelope),
                   ``serve.degrade.*`` (which degradation-ladder rung
                   answered), ``serve.chaos.*`` (injected faults), and
-                  ``serve.loop.*`` (the simulated request loop) — all
-                  flow into BENCH rows via ``bench_rows`` generically.
+                  ``serve.loop.*`` (the simulated request loop), and
+                  ``check.pass`` / ``check.fail`` (the ``repro.check``
+                  static verifier on replayed artifacts) — all flow
+                  into BENCH rows via ``bench_rows`` generically.
   ``exporters`` — Chrome-trace/Perfetto JSON (``--trace out.json``,
                   load in ``chrome://tracing``) and ``search.obs.*``
                   BENCH rows.

@@ -24,7 +24,7 @@ from anywhere in the stack without cycles.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import List, Sequence
 
 
 def _fmt_bytes(n: float) -> str:

@@ -12,7 +12,6 @@ uint8 wire traffic = 4x less DCN bytes than f32.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax

@@ -115,6 +115,9 @@ def main(argv=None) -> int:
                          "run and write it as Chrome-trace JSON (load "
                          "in chrome://tracing or Perfetto); also "
                          "prints the search.obs.* provenance counters")
+    ap.add_argument("--check", action="store_true",
+                    help="run the repro.check static verifier over the "
+                         "searched schedule; exit nonzero on findings")
     ap.add_argument("--explain", action="store_true",
                     help="print the markdown schedule-explain report: "
                          "per-layer mapping decisions, per-level "
@@ -253,6 +256,15 @@ def _run(args: argparse.Namespace, ap: argparse.ArgumentParser) -> int:
                   f"vs dedup-off baseline ({dt_brute * 1e3:.1f} ms), "
                   f"schedules bit-identical")
 
+    if args.check:
+        from repro.check import verify_schedule
+        findings = verify_schedule(layers, sched, source="cli")
+        for f in findings:
+            print(f"check,{f.code},{f.where},{f.detail}")
+        print(f"# check: {'FAIL' if findings else 'ok'} "
+              f"({len(findings)} findings)")
+        if findings:
+            return 1
     print(f"# auto-schedule {args.workload} on {hw.rows}x{hw.cols} PEs, "
           f"hierarchy {'/'.join(hw.hierarchy.names)}")
     print(f"groups={len(sched.groups)} spill_edges={len(sched.edges)} "

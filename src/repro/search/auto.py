@@ -28,7 +28,7 @@ from repro.core.workload import (MAC_OPS, NORM, SCAN, SOFTMAX, Layer,
                                  scan_state_bytes)
 from repro.search import cache as cache_mod
 from repro.search import lower as lower_mod
-from repro.search import mapper, partition, tiler
+from repro.search import mapper, partition
 from repro.search.memo import SearchMemo
 from repro.search.perf import PerfRecorder
 

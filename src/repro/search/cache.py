@@ -11,14 +11,17 @@ same-directory temp file and ``os.replace``s it into place, so a
 reader — including another ``cached_search`` racing on the same key —
 observes either no artifact or a complete one, never a truncated JSON
 (which would replay as ``cache.corrupt``).  Under write contention a
-per-key claim file additionally serializes the store itself: of N
-processes missing on one key concurrently, exactly one performs the
-store; the others still search (they need the result) but skip the
-redundant write (``cache.store_skipped``).
+per-key ``flock``-held claim file additionally serializes the store
+itself: of N processes missing on one key, exactly one performs the
+store — in *every* interleaving, not just the common ones (the claim
+protocol is exhaustively model-checked by ``repro.check.races``); the
+others still search (they need the result) but skip the redundant
+write (``cache.store_skipped``).
 """
 from __future__ import annotations
 
 import dataclasses
+import fcntl
 import hashlib
 import json
 import os
@@ -120,27 +123,63 @@ def claim_stale_s(stale_s: Optional[float] = None) -> float:
     return _CLAIM_STALE_S
 
 
+# flock fds held by claims this process owns, keyed by lock path; the
+# fd must outlive the claim (closing it drops the kernel lock)
+_CLAIM_FDS: dict = {}
+
+
 def _claim_store(path: Path, stale_s: Optional[float] = None) -> bool:
-    """Try to claim the store of one artifact key via an exclusive
-    ``<path>.lock`` file holding the claimant's pid.  Returns True when
-    this process owns the store (and must ``_release_store`` after the
-    ``os.replace``), False when another live writer already holds it.
-    A claim whose owner died mid-search (or that outlived the staleness
-    threshold — see ``claim_stale_s``) is broken and re-taken
-    (``cache.lock_takeover``), so a crashed writer can never wedge the
-    key."""
+    """Try to claim the store of one artifact key.
+
+    The claim is an exclusive non-blocking ``flock`` on ``<path>.lock``
+    plus a pid stamp inside it.  ``flock`` makes the protocol safe by
+    construction where the old create/stamp/unlink scheme was not: the
+    kernel releases a crashed claimant's lock instantly (no stale
+    window to wait out), acquisition and ownership are one atomic step
+    (no unstamped-lock window a reader can misread as dead), and a
+    taken-over lock file cannot be unlinked out from under a *fresh*
+    claimant by a second taker racing the same stale observation — the
+    dead inode is detected by re-validating ``fstat`` vs ``stat`` after
+    acquiring, and the loser simply retries on the new file.  The
+    interleaving space of this protocol is exhaustively model-checked
+    by ``repro.check.races``.
+
+    Returns True when this process owns the store (and must
+    ``_release_store`` afterwards), False when another live claimant
+    holds the key.  A pid stamp found *without* a held flock means the
+    stamper crashed (the kernel dropped its lock), or the stamp was
+    planted by an older-protocol writer: it is honored only while the
+    pid is alive and the stamp younger than ``claim_stale_s``, else
+    taken over (``cache.lock_takeover``)."""
     limit = claim_stale_s(stale_s)
     lock = Path(f"{path}.lock")
     lock.parent.mkdir(parents=True, exist_ok=True)
-    for _ in range(2):
+    for _ in range(3):
+        fd = os.open(lock, os.O_CREAT | os.O_RDWR)
         try:
-            fd = os.open(lock, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
-        except FileExistsError:
+            fcntl.flock(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+        except OSError:
+            os.close(fd)
+            return False        # a live claimant holds the key
+        try:
+            disk_ino = os.stat(lock).st_ino
+        except OSError:
+            disk_ino = None     # released + unlinked under us: retry
+        if disk_ino is None or os.fstat(fd).st_ino != disk_ino:
+            os.close(fd)        # we locked a dead inode; drop + retry
+            continue
+        try:
+            raw = os.pread(fd, 64, 0).decode("ascii", "replace").strip()
+        except OSError:
+            raw = ""
+        if raw:
+            # a stamp with no live flock: crashed claimant or a
+            # legacy/planted lock file.  Honor it only while fresh.
             try:
-                pid = int(lock.read_text() or "0")
-                age = time.time() - lock.stat().st_mtime
-            except (OSError, ValueError):
-                continue        # holder released between open and read
+                pid = int(raw)
+            except ValueError:
+                pid = 0
+            age = time.time() - os.fstat(fd).st_mtime
             alive = False
             if pid > 0:
                 try:
@@ -149,36 +188,36 @@ def _claim_store(path: Path, stale_s: Optional[float] = None) -> bool:
                 except (OSError, PermissionError):
                     alive = False
             if alive and age < limit:
+                os.close(fd)    # leave the stamp untouched
                 return False
-            try:                # stale claim: break it and retry once
-                os.unlink(lock)
-                obs.count("cache.lock_takeover")
-                obs.event("cache.lock_takeover", path=str(lock), pid=pid,
-                          age_s=age, alive=alive)
-            except OSError:
-                pass
-            continue
+            obs.count("cache.lock_takeover")
+            obs.event("cache.lock_takeover", path=str(lock), pid=pid,
+                      age_s=age, alive=alive)
         try:
-            with os.fdopen(fd, "w") as f:
-                f.write(str(os.getpid()))
-        except BaseException:
-            # never leak a claim we failed to stamp: the lock file
-            # exists but carries no pid, which would wedge the key for
-            # the full staleness window
-            try:
-                os.unlink(lock)
-            except OSError:
-                pass
-            raise
+            os.ftruncate(fd, 0)
+            os.pwrite(fd, str(os.getpid()).encode(), 0)
+        except OSError:
+            pass                # the flock, not the stamp, is the claim
+        _CLAIM_FDS[str(lock)] = fd
         return True
     return False
 
 
 def _release_store(path: Path) -> None:
+    """Release a held claim: unlink the lock file *first* (so a rival
+    that already opened it fails inode re-validation instead of locking
+    an orphan), then close the fd, dropping the flock."""
+    lock = f"{path}.lock"
+    fd = _CLAIM_FDS.pop(lock, None)
     try:
-        os.unlink(f"{path}.lock")
+        os.unlink(lock)
     except OSError:
         pass
+    if fd is not None:
+        try:
+            os.close(fd)
+        except OSError:
+            pass
 
 
 def _load(path: Path):
@@ -319,6 +358,17 @@ def try_replay(path: Path, layers: List[Layer], key: str, *,
     return None, why
 
 
+def _replayable(path: Path, layers: List[Layer], key: str) -> bool:
+    """Quiet probe (no counters): does ``path`` hold a valid artifact
+    for this request?  Used by a claimant that won the store *after*
+    another writer already landed a good artifact — re-storing would
+    break the exactly-one-store invariant for no benefit — while a
+    corrupt / stale / mis-named artifact still gets repaired."""
+    sched, why = _load(path)
+    return (why == "ok" and sched.key == key
+            and _remap_layer_names(sched, layers) is not None)
+
+
 def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                   workload: str = "custom",
                   cache_dir: Optional[Path] = None,
@@ -326,7 +376,8 @@ def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
                   tile_mode: str = "full",
                   spatial_mode: str = "factored",
                   replay: bool = True,
-                  stale_s: Optional[float] = None):
+                  stale_s: Optional[float] = None,
+                  verify: bool = False):
     """Run (or replay) the auto-scheduler through the artifact cache.
     Replayed artifacts are name-remapped onto the request's layers (the
     content-hashed key is rename-stable by design).  ``tile_mode`` and
@@ -358,7 +409,14 @@ def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
     caller — e.g. the serving degradation ladder — already probed the
     disk tier itself and wants exactly one ``cache.corrupt`` count per
     bad artifact, not two): the call counts a miss, searches, and
-    stores under the claim."""
+    stores under the claim.
+
+    ``verify=True`` runs the independent static checker
+    (``repro.check``) over every replayed artifact before returning it
+    (``check.pass`` / ``check.fail`` counters): a schedule that fails
+    verification is treated as a miss and re-searched instead of being
+    served.  Fault-free replays are bit-identical with or without the
+    flag — the checker only reads."""
     from repro.search.auto import auto_schedule
     hw = hw or HWSpec()
     if cache_dir is None:
@@ -368,10 +426,20 @@ def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
     key = schedule_key(layers, hw, tile_mode=tile_mode,
                        spatial_mode=spatial_mode)
     path = Path(cache_dir) / f"{workload}-{key}.json"
+    verify_failed = False
     if replay and not refresh:
         sched, _why = try_replay(path, layers, key, workload=workload)
         if sched is not None:
-            return sched
+            if not verify:
+                return sched
+            from repro.check import verify_schedule
+            if not verify_schedule(layers, sched, source="replay"):
+                return sched
+            # loadable but statically invalid: fall through to the
+            # miss path and force the overwrite under the claim
+            verify_failed = True
+            obs.event("cache.replay", outcome="verify_fail",
+                      workload=workload, key=key, path=str(path))
     obs.count("cache.miss")
     obs.event("cache.replay", outcome="miss", workload=workload, key=key,
               refresh=refresh)
@@ -383,7 +451,12 @@ def cached_search(layers: List[Layer], hw: Optional[HWSpec] = None, *,
         sched = auto_schedule(layers, hw, workload=workload,
                               tile_mode=tile_mode,
                               spatial_mode=spatial_mode)
-        if claimed or refresh:
+        # a claim won late (after the first writer stored and released)
+        # must not store again: exactly-one-store is unconditional, not
+        # a matter of racing luck.  A bad on-disk artifact (corrupt /
+        # stale version / mis-named) is still repaired.
+        if refresh or (claimed and (verify_failed or
+                                    not _replayable(path, layers, key))):
             save_schedule(sched, path)
             obs.count("cache.store")
         else:

@@ -217,7 +217,12 @@ class ServeStore:
     ``search_deadline_s`` is the default per-request budget the
     envelope honors (None: unbounded); ``stale_s`` overrides the claim
     staleness window of ``search.cache`` per store (None: the
-    ``REPRO_CLAIM_STALE_S`` env / built-in default)."""
+    ``REPRO_CLAIM_STALE_S`` env / built-in default); ``verify`` runs
+    the ``repro.check`` static verifier over every disk replay before
+    serving it — a replayed artifact with findings is treated as a
+    miss and re-searched (counters ``check.pass`` / ``check.fail``).
+    Memory hits are not re-verified: the memory tier only ever holds
+    schedules that entered through a verified (or searched) path."""
 
     def __init__(self, cache_dir, hw: Optional[HWSpec] = None, *,
                  tile_mode: str = "full",
@@ -225,7 +230,8 @@ class ServeStore:
                  retry_attempts: int = 3,
                  retry_backoff_s: float = 0.05,
                  search_deadline_s: Optional[float] = None,
-                 stale_s: Optional[float] = None) -> None:
+                 stale_s: Optional[float] = None,
+                 verify: bool = False) -> None:
         self.cache_dir = Path(cache_dir)
         self.hw = hw or HWSpec()
         self.tile_mode = tile_mode
@@ -234,6 +240,7 @@ class ServeStore:
         self.retry_backoff_s = retry_backoff_s
         self.search_deadline_s = search_deadline_s
         self.stale_s = stale_s
+        self.verify = bool(verify)
         self._mem: Dict[str, object] = {}           # key -> Schedule
         # (canonical name) -> (layers, key): resolved once per endpoint
         self._resolved: Dict[str, Tuple[List[Layer], str]] = {}
@@ -274,15 +281,32 @@ class ServeStore:
         self._fallback.pop(key, None)
         return self._mem.pop(key, None) is not None
 
+    def _replay_ok(self, layers: List[Layer], sched, name: str) -> bool:
+        """Gate one disk replay through the static verifier when the
+        store was built with ``verify=True``."""
+        if not self.verify:
+            return True
+        from repro.check import verify_schedule
+        findings = verify_schedule(layers, sched, source="serve")
+        if findings:
+            obs.event("serve.lookup", workload=name,
+                      outcome="verify_fail", n=len(findings),
+                      first=str(findings[0]))
+            return False
+        return True
+
     # -- the retry envelope -------------------------------------------
 
     def _search_with_retry(self, layers: List[Layer], name: str,
-                           deadline_s: Optional[float]) -> Tuple[object, int]:
+                           deadline_s: Optional[float],
+                           refresh: bool = False) -> Tuple[object, int]:
         """One cold search under the deadline + exponential-backoff
         retry envelope.  Returns (schedule, attempts); raises the last
         failure (or ``DeadlineExceeded``) once the budget is spent —
         the ladder degrades from there, the caller never sees a stall.
-        """
+        ``refresh`` forces the artifact store (set when a verify-fail
+        proved the on-disk artifact bad: the repaired schedule must
+        overwrite it, not defer to it)."""
         t0 = time.monotonic()
         attempts = 0
         last: Optional[BaseException] = None
@@ -305,7 +329,7 @@ class ServeStore:
                     layers, self.hw, workload=name,
                     cache_dir=self.cache_dir, tile_mode=self.tile_mode,
                     spatial_mode=self.spatial_mode, replay=False,
-                    stale_s=self.stale_s)
+                    stale_s=self.stale_s, refresh=refresh)
                 if i:
                     obs.count("serve.retry.recovered")
                 return sched, attempts
@@ -392,11 +416,15 @@ class ServeStore:
         # rung 2: disk replay (artifact parse + remap, no DP)
         sched, _why = try_replay(self.cache_dir / f"{name}-{key}.json",
                                  layers, key, workload=name)
+        bad_replay = False
         if sched is not None:
-            self._mem[key] = sched
-            obs.event("serve.lookup", workload=name, key=key,
-                      outcome="disk_hit")
-            return LookupResult(sched, name, key, b_abs, "disk", False)
+            if self._replay_ok(layers, sched, name):
+                self._mem[key] = sched
+                obs.event("serve.lookup", workload=name, key=key,
+                          outcome="disk_hit")
+                return LookupResult(sched, name, key, b_abs, "disk",
+                                    False)
+            bad_replay = True
         # rung 3: cold search under the retry + deadline envelope
         budget = self.search_deadline_s if deadline_s is _UNSET \
             else deadline_s
@@ -404,7 +432,8 @@ class ServeStore:
         attempts = 0
         try:
             sched, attempts = self._search_with_retry(layers, name,
-                                                      budget)
+                                                      budget,
+                                                      refresh=bad_replay)
             self._mem[key] = sched
             obs.event("serve.lookup", workload=name, key=key,
                       outcome="searched", attempts=attempts)
@@ -463,12 +492,16 @@ class ServeStore:
             return sched
         sched, _why = try_replay(self.cache_dir / f"{workload}-{key}.json",
                                  layers, key, workload=workload)
+        bad_replay = False
         if sched is not None:
-            self._mem[key] = sched
-            return sched
+            if self._replay_ok(layers, sched, workload):
+                self._mem[key] = sched
+                return sched
+            bad_replay = True
         try:
             sched, _ = self._search_with_retry(layers, workload,
-                                               self.search_deadline_s)
+                                               self.search_deadline_s,
+                                               refresh=bad_replay)
             self._mem[key] = sched
             return sched
         except Exception as e:             # noqa: BLE001

@@ -1,0 +1,207 @@
+"""The static schedule verifier: every golden and every registered
+workload's searched schedule must verify clean; every seeded artifact
+mutation must be caught; degraded (heuristic / nearest-batch) answers
+must pass the conservation checks; verify-on-replay must be a pure
+read (bit-identical schedules) that falls back to a re-search on a
+tampered artifact."""
+import dataclasses
+import json
+from pathlib import Path
+
+import pytest
+
+from repro import obs
+from repro.check import (check_artifact, check_doc, lint_doc,
+                         verify_schedule)
+from repro.check.mutations import MUTATIONS, run_corpus
+from repro.core.costmodel import HWSpec
+from repro.search import WORKLOADS, auto_schedule, get_workload
+from repro.search.cache import cached_search
+from repro.serve.store import ServeStore, heuristic_schedule
+
+GOLDENS = sorted(Path(__file__).parent.glob("golden/*.json"))
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: the checker over every golden + every registered workload
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("golden", GOLDENS, ids=lambda p: p.stem)
+def test_goldens_verify_clean(golden):
+    doc = json.loads(golden.read_text())
+    assert check_doc(doc) == []
+
+
+@pytest.mark.parametrize("workload",
+                         WORKLOADS + ("edgenext-s-b16", "rwkv6-b4"))
+def test_searched_schedules_verify_clean(workload):
+    layers = get_workload(workload)
+    sched = auto_schedule(layers, workload=workload)
+    assert verify_schedule(layers, sched, source="test") == []
+
+
+def test_artifact_roundtrip_verifies_clean(tmp_path):
+    """The raw JSON an artifact file holds (tuples -> lists) verifies
+    identically to the live Schedule."""
+    layers = get_workload("edgenext-s")
+    sched = cached_search(layers, workload="edgenext-s",
+                          cache_dir=tmp_path)
+    art = next(tmp_path.glob("edgenext-s-*.json"))
+    doc = json.loads(art.read_text())
+    assert check_artifact(doc) == []
+    assert check_artifact(doc, layers) == []
+    assert lint_doc(doc, layers) == []
+    assert dataclasses.asdict(sched)["key"] == doc["key"]
+
+
+# ---------------------------------------------------------------------------
+# the mutation corpus: each seeded corruption must be caught
+# ---------------------------------------------------------------------------
+
+
+def test_mutation_corpus_all_caught(tmp_path):
+    assert len(MUTATIONS) >= 15
+    results, base_findings = run_corpus(cache_dir=tmp_path)
+    for wl, findings in base_findings.items():
+        assert findings == [], f"base artifact for {wl} not clean"
+    uncaught = [r.mutation for r in results if not r.caught]
+    applied = [r.mutation for r in results if r.applied]
+    assert len(applied) == len(MUTATIONS), "a mutation failed to apply"
+    assert uncaught == []
+
+
+# ---------------------------------------------------------------------------
+# satellite 4: degraded answers still satisfy conservation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("workload", ("edgenext-s", "rwkv6"))
+def test_heuristic_schedule_verifies(workload):
+    layers = get_workload(workload)
+    sched = heuristic_schedule(layers, workload=workload)
+    assert getattr(sched, "degraded", None) == "heuristic"
+    assert verify_schedule(layers, sched, source="test") == []
+
+
+def test_nearest_batch_rescale_verifies(tmp_path, monkeypatch):
+    """Rung 4 of the serving ladder: warm one batch level, fail the
+    cold search for another, and check the rescaled answer against the
+    *requested* batch's layers — the cost identities (edp = e*l,
+    fps*l = 1) must survive the linear rescale."""
+    from repro.serve import chaos as chaos_mod
+    store = ServeStore(tmp_path, HWSpec())
+    store.lookup("edgenext-s", 4)
+
+    def boom():
+        raise RuntimeError("injected search failure")
+
+    monkeypatch.setattr(chaos_mod, "on_search_attempt", boom)
+    res = store.request("edgenext-s", 16)
+    assert res.outcome == "nearest_batch" and res.degraded
+    layers = get_workload("edgenext-s-b16")
+    assert verify_schedule(layers, res.schedule, source="test") == []
+
+
+# ---------------------------------------------------------------------------
+# verify-on-replay wiring: pure read, counters, tamper fallback
+# ---------------------------------------------------------------------------
+
+
+def test_cached_search_verify_bit_identical(tmp_path):
+    layers = get_workload("edgenext-reduced")
+    base = cached_search(layers, workload="edgenext-reduced",
+                         cache_dir=tmp_path)
+    with obs.tracing() as tr:
+        plain = cached_search(layers, workload="edgenext-reduced",
+                              cache_dir=tmp_path)
+        checked = cached_search(layers, workload="edgenext-reduced",
+                                cache_dir=tmp_path, verify=True)
+    assert dataclasses.asdict(plain) == dataclasses.asdict(base)
+    assert dataclasses.asdict(checked) == dataclasses.asdict(base)
+    assert tr.counters.get("check.pass") == 1
+    assert not tr.counters.get("check.fail")
+
+
+def test_cached_search_verify_fail_repairs_artifact(tmp_path):
+    """A loadable but statically-invalid artifact (tampered cost row)
+    must fail verification, be re-searched, and be overwritten with
+    the repaired schedule — which then replays clean."""
+    layers = get_workload("edgenext-reduced")
+    base = cached_search(layers, workload="edgenext-reduced",
+                         cache_dir=tmp_path)
+    art = next(tmp_path.glob("edgenext-reduced-*.json"))
+    doc = json.loads(art.read_text())
+    doc["cost"]["latency_s"] *= 7.0
+    art.write_text(json.dumps(doc))
+    with obs.tracing() as tr:
+        repaired = cached_search(layers, workload="edgenext-reduced",
+                                 cache_dir=tmp_path, verify=True)
+    assert tr.counters.get("check.fail") == 1
+    assert tr.counters.get("cache.miss") == 1
+    assert tr.counters.get("cache.store") == 1
+    assert dataclasses.asdict(repaired) == dataclasses.asdict(base)
+    with obs.tracing() as tr2:
+        again = cached_search(layers, workload="edgenext-reduced",
+                              cache_dir=tmp_path, verify=True)
+    assert tr2.counters.get("check.pass") == 1
+    assert dataclasses.asdict(again) == dataclasses.asdict(base)
+
+
+def test_servestore_verify_falls_back_to_search(tmp_path):
+    """A ServeStore built with verify=True treats a tampered disk
+    artifact as a miss: the request is served by a fresh search, not
+    the bad replay."""
+    layers = get_workload("edgenext-reduced")
+    base = cached_search(layers, workload="edgenext-reduced",
+                         cache_dir=tmp_path)
+    art = next(tmp_path.glob("edgenext-reduced-*.json"))
+    doc = json.loads(art.read_text())
+    doc["cost"]["energy_j"] *= 0.1
+    art.write_text(json.dumps(doc))
+    store = ServeStore(tmp_path, HWSpec(), verify=True)
+    with obs.tracing() as tr:
+        res = store.request("edgenext-reduced")
+    assert res.outcome == "searched" and not res.degraded
+    assert tr.counters.get("check.fail") == 1
+    assert dataclasses.asdict(res.schedule) == dataclasses.asdict(base)
+    # the repaired schedule also overwrote the bad artifact on disk
+    assert check_artifact(json.loads(art.read_text()), layers) == []
+    # now resident in memory: no re-verification, no disk touch
+    assert store.request("edgenext-reduced").outcome == "mem"
+
+
+def test_servestore_verify_off_by_default(tmp_path):
+    store = ServeStore(tmp_path, HWSpec())
+    assert store.verify is False
+    with obs.tracing() as tr:
+        store.lookup("edgenext-reduced")
+        store.evict("edgenext-reduced")
+        store.lookup("edgenext-reduced")       # disk replay, unverified
+    assert not tr.counters.get("check.pass")
+    assert not tr.counters.get("check.fail")
+
+
+# ---------------------------------------------------------------------------
+# the CLI: machine-readable findings, nonzero exit on violation
+# ---------------------------------------------------------------------------
+
+
+def test_cli_clean_and_tampered_artifact(tmp_path):
+    from repro.check.__main__ import main
+    layers = get_workload("edgenext-reduced")
+    cached_search(layers, workload="edgenext-reduced",
+                  cache_dir=tmp_path)
+    assert main(["--cache-dir", str(tmp_path)]) == 0
+    art = next(tmp_path.glob("edgenext-reduced-*.json"))
+    doc = json.loads(art.read_text())
+    doc["cost"]["edp"] *= 3.0
+    art.write_text(json.dumps(doc))
+    assert main([str(art)]) == 1
+    assert main(["--cache-dir", str(tmp_path)]) == 1
+
+
+def test_cli_requires_a_target():
+    from repro.check.__main__ import main
+    with pytest.raises(SystemExit):
+        main([])

@@ -1,0 +1,138 @@
+"""The claim-lock protocol, verified two ways: exhaustively over every
+interleaving by the model explorer (``repro.check.races``), and
+deterministically against the real flock implementation in
+``search.cache`` (flock conflicts are per-open-file-description, so a
+single process can drive both sides of each race without wall-clock
+sleeps).  Together these replace the old 4-process timing-based race
+test as the lock-protocol coverage."""
+import dataclasses
+import json
+
+from repro import obs
+from repro.check.races import explore, verify_protocol
+from repro.core.workload import Layer
+from repro.search.cache import (_claim_store, _release_store,
+                                cached_search)
+from repro.serve.chaos import plant_stale_lock
+
+_TINY = [Layer("l0", "pwconv", k=8, c=8, ox=4, oy=4),
+         Layer("l1", "dwconv", c=8, ox=4, oy=4, fx=3, fy=3)]
+
+
+# ---------------------------------------------------------------------------
+# the exhaustive explorer: the flock protocol is safe, the legacy
+# protocol's design bugs are found
+# ---------------------------------------------------------------------------
+
+
+def test_flock_protocol_exhaustively_safe():
+    """Every interleaving of N=2..3 processes (plus crashes, plus a
+    pre-planted dead claimant stamp) keeps the invariants: at most one
+    store, at most one claim, no foreign unlink, no lost artifact, no
+    leaked lock."""
+    results = verify_protocol(max_n=3)
+    assert len(results) == 10
+    for r in results:
+        assert r.ok, (r.n, r.max_crashes, [v.kind for v in r.violations])
+        assert r.states > 0 and r.terminals > 0
+
+
+def test_flock_fault_free_runs_store_exactly_once():
+    for planted in (None, "dead"):
+        r = explore(2, planted_stamp=planted)
+        fault_free = {o for o in r.outcomes if o[2] == 0}
+        assert fault_free == {(1, True, 0)}
+
+
+def test_flock_crashed_runs_never_double_store():
+    r = explore(3, max_crashes=2)
+    assert r.ok
+    assert all(stores <= 1 for stores, _, _ in r.outcomes)
+
+
+def test_legacy_protocol_races_are_found():
+    """The explorer's teeth: the previous create/stamp/unlink scheme
+    exhibits the takeover-unlink ABA (a release unlinking a rival's
+    fresh claim), the resulting double claim, and the late-claim
+    double store — all within N=2 and zero crashes."""
+    r = explore(2, protocol="legacy")
+    kinds = {v.kind for v in r.violations}
+    assert {"foreign_unlink", "double_claim", "multi_store"} <= kinds
+    for v in r.violations:
+        assert v.trace, "each violation carries a replayable trace"
+
+
+def test_legacy_planted_stamp_races():
+    r = explore(2, protocol="legacy", planted_stamp="dead")
+    assert {"double_claim", "multi_store"} & \
+        {v.kind for v in r.violations}
+
+
+# ---------------------------------------------------------------------------
+# deterministic regression tests against the real flock implementation
+# ---------------------------------------------------------------------------
+
+
+def test_claim_is_exclusive_and_released(tmp_path):
+    path = tmp_path / "wl-key.json"
+    assert _claim_store(path) is True
+    # flock conflicts apply across open file descriptions, so a second
+    # claim in the same process models a rival process exactly
+    assert _claim_store(path) is False
+    _release_store(path)
+    assert not (tmp_path / "wl-key.json.lock").exists()
+    assert _claim_store(path) is True
+    _release_store(path)
+
+
+def test_dead_stamp_taken_over_once(tmp_path):
+    """The ABA regression: one dead claimant's stamp must yield exactly
+    one takeover — the second contender is denied by the flock, it
+    must NOT 'take over' the first's fresh claim."""
+    path = tmp_path / "wl-key.json"
+    plant_stale_lock(path)                      # dead pid, ancient mtime
+    with obs.tracing() as tr:
+        assert _claim_store(path) is True
+        assert _claim_store(path) is False
+    assert tr.counters.get("cache.lock_takeover") == 1
+    _release_store(path)
+    assert not (tmp_path / "wl-key.json.lock").exists()
+
+
+def test_live_fresh_stamp_not_taken_over(tmp_path):
+    import os
+    path = tmp_path / "wl-key.json"
+    plant_stale_lock(path, pid=os.getpid(), age_s=0.0)
+    with obs.tracing() as tr:
+        assert _claim_store(path) is False
+    assert not tr.counters.get("cache.lock_takeover")
+    assert (tmp_path / "wl-key.json.lock").exists()   # left intact
+
+
+def test_late_claim_skips_store_on_valid_artifact(tmp_path):
+    """Exactly-one-store is unconditional: a claimant that wins the
+    lock after a valid artifact already landed must not store again —
+    the artifact stays byte-identical."""
+    first = cached_search(_TINY, workload="tiny", cache_dir=tmp_path)
+    art = next(tmp_path.glob("tiny-*.json"))
+    before = art.read_bytes()
+    with obs.tracing() as tr:
+        again = cached_search(_TINY, workload="tiny",
+                              cache_dir=tmp_path, replay=False)
+    assert tr.counters.get("cache.store_skipped") == 1
+    assert not tr.counters.get("cache.store")
+    assert art.read_bytes() == before
+    assert dataclasses.asdict(again) == dataclasses.asdict(first)
+
+
+def test_claim_repairs_corrupt_artifact(tmp_path):
+    """The late-claim store skip must not shadow repair: a corrupt
+    on-disk artifact is re-stored under the claim."""
+    cached_search(_TINY, workload="tiny", cache_dir=tmp_path)
+    art = next(tmp_path.glob("tiny-*.json"))
+    art.write_text(art.read_text()[:40])               # truncate
+    with obs.tracing() as tr:
+        cached_search(_TINY, workload="tiny", cache_dir=tmp_path,
+                      replay=False)
+    assert tr.counters.get("cache.store") == 1
+    json.loads(art.read_text())                        # valid again

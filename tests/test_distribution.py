@@ -7,7 +7,6 @@ import sys
 import textwrap
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config

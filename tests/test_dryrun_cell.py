@@ -5,7 +5,6 @@ use; one cheap decode cell keeps it from regressing)."""
 import json
 import subprocess
 import sys
-from pathlib import Path
 
 # JAX_PLATFORMS=cpu: the image ships libtpu; without the override the
 # child process burns 60+s probing a TPU backend that does not exist.

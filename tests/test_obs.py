@@ -20,7 +20,6 @@ import pytest
 
 from repro import obs
 from repro.core.costmodel import HWSpec
-from repro.core.workload import Layer
 from repro.obs.tracer import Span, Tracer
 from repro.search import auto_schedule, get_workload, sweep_memory
 from repro.search.cache import (SEARCH_VERSION, cached_search,

@@ -21,9 +21,7 @@ import pytest
 
 from repro.core import dataflow
 from repro.core.costmodel import HWSpec
-from repro.core.workload import (SCAN, Layer, recurrentgemma_workload,
-                                 rwkv6_workload, scan_state_bytes,
-                                 total_macs)
+from repro.core.workload import SCAN, Layer, scan_state_bytes, total_macs
 from repro.search import (WORKLOADS, auto_schedule, evaluate_schedule,
                           get_workload)
 from repro.search import mapper, partition

@@ -10,7 +10,6 @@ The load-bearing claims:
   * ``lower`` emits Pallas block parameters that pass the existing
     kernel-vs-ref correctness checks.
 """
-import dataclasses
 import json
 import subprocess
 import sys

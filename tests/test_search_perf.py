@@ -16,7 +16,6 @@ regress silently:
   * the process-pool DSE fan-out returns the same points as serial.
 """
 import dataclasses
-import json
 import subprocess
 import sys
 

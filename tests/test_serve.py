@@ -2,15 +2,12 @@
 the arrival-rate batching policy, cache atomicity under crashes and
 concurrent writers, and the data-parallel fan-out."""
 import dataclasses
-import hashlib
 import json
 import signal
 import subprocess
 import sys
 import textwrap
 import time
-from concurrent.futures import ProcessPoolExecutor
-from pathlib import Path
 
 import pytest
 
@@ -22,8 +19,7 @@ from repro.core.workload import (Layer, edgenext_serving_workload,
                                  with_batch)
 from repro.search import get_workload, parse_workload
 from repro.search.cache import (SEARCH_VERSION, _remap_layer_names,
-                                cached_search, load_schedule,
-                                schedule_key)
+                                cached_search)
 from repro.serve import (BatchPoint, ServeStore, canonical_name,
                          distinct_batches, pick_batch, rate_table)
 
@@ -161,39 +157,11 @@ def test_remap_rejects_duplicate_layer_names(tmp_path):
     assert dataclasses.asdict(again) == dataclasses.asdict(sched)
 
 
-def _race_worker(args):
-    """Race one cached_search key from a pool process; all workers hold
-    until a shared deadline so they miss together."""
-    cache_dir, deadline = args
-    time.sleep(max(0.0, deadline - time.time()))
-    hw = HWSpec()
-    with obs.tracing() as tr:
-        sched = cached_search(_TINY, hw, workload="race",
-                              cache_dir=cache_dir)
-    blob = json.dumps(dataclasses.asdict(sched), sort_keys=True)
-    return dict(tr.counters), hashlib.sha256(blob.encode()).hexdigest()
-
-
-def test_concurrent_cached_search_single_store(tmp_path):
-    """N processes racing one cold key: zero corrupt replays, exactly
-    one store (the claim), identical schedules everywhere, and a valid
-    artifact on disk."""
-    n = 4
-    with ProcessPoolExecutor(max_workers=n) as ex:
-        deadline = time.time() + 1.5           # post-spawn sync point
-        results = list(ex.map(_race_worker,
-                              [(tmp_path, deadline)] * n))
-    counters = [c for c, _ in results]
-    digests = {d for _, d in results}
-    total = lambda k: sum(c.get(f"cache.{k}", 0) for c in counters)
-    assert total("corrupt") == 0
-    assert total("store") == 1
-    assert total("store") + total("store_skipped") + total("hit") == n
-    assert len(digests) == 1
-    key = schedule_key(_TINY, HWSpec())
-    replay = load_schedule(tmp_path / f"race-{key}.json")
-    assert replay is not None and replay.key == key
-    assert not list(tmp_path.glob("*.lock"))   # claims all released
+# Concurrent-writer atomicity (exactly one store per key across racing
+# processes, no lost artifacts, no double takeover) is covered by the
+# exhaustive interleaving explorer + deterministic flock tests in
+# tests/test_check_races.py — strictly stronger than the 4-process
+# wall-clock race this file used to run.
 
 
 # ---------------------------------------------------------------------------

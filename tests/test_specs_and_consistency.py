@@ -1,6 +1,5 @@
 """Input/cache spec structure for every dry-run cell + decode-vs-forward
 consistency for the stateful families (hybrid, enc-dec)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

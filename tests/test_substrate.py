@@ -1,6 +1,5 @@
 """Substrate tests: checkpoint store, data pipeline, optimizer,
 compression, watchdog, HLO parser, sharding rules."""
-import json
 
 import jax
 import jax.numpy as jnp
@@ -15,8 +14,8 @@ from repro.data.synthetic import SyntheticLMDataset
 from repro.models import get_module, params as param_lib
 from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
                          global_norm, warmup_cosine)
-from repro.optim.compression import (dequantize_int8, init_feedback,
-                                     quantize_int8, quantize_with_feedback)
+from repro.optim.compression import (dequantize_int8, quantize_int8,
+                                     quantize_with_feedback)
 from repro.runtime.watchdog import StragglerWatchdog
 
 

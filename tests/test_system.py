@@ -14,7 +14,7 @@ from repro.checkpoint import AsyncCheckpointer, latest_step, load_checkpoint
 from repro.configs import SHAPES_BY_NAME, get_config, reduced
 from repro.data.synthetic import make_dataset
 from repro.models import get_module, params as P
-from repro.optim import AdamWState, adamw_init, warmup_cosine
+from repro.optim import adamw_init, warmup_cosine
 from repro.runtime import build_train_step
 
 
